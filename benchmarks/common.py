@@ -1,0 +1,35 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall seconds per call (post-warmup, blocked on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def save_json(name: str, record) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    return path
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

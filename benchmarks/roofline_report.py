@@ -1,0 +1,106 @@
+"""Renders the §Roofline table from the dry-run JSON cache.
+
+One row per (arch x shape x mesh): the three roofline terms (seconds),
+dominant bottleneck, per-device HBM, MODEL_FLOPS/HLO_FLOPs ratio, and the
+roofline-implied MFU bound. Also emits the §Dry-run summary (memory and
+collective schedule per cell).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR, csv_row
+
+DRYRUN_DIR = os.path.join(RESULTS_DIR, "dryrun")
+
+SKIPS = [
+    ("starcoder2_3b", "long_500k", "full attention at 500k ctx"),
+    ("qwen2_5_32b", "long_500k", "full attention at 500k ctx"),
+    ("deepseek_coder_33b", "long_500k", "full attention at 500k ctx"),
+    ("moonshot_v1_16b_a3b", "long_500k", "full attention at 500k ctx"),
+    ("grok_1_314b", "long_500k", "full attention at 500k ctx"),
+    ("musicgen_large", "long_500k", "full attention at 500k ctx"),
+    ("internvl2_76b", "long_500k", "full attention at 500k ctx"),
+]
+
+
+def load_cells(dirname: str = DRYRUN_DIR, pattern: str = "*.json"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dirname, pattern))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def _fmt(x, nd=2):
+    if x is None:
+        return "-"
+    if x == 0:
+        return "0"
+    if abs(x) >= 1000 or abs(x) < 0.01:
+        return f"{x:.2e}"
+    return f"{x:.{nd}f}"
+
+
+def markdown_table(cells) -> str:
+    hdr = ("| arch | shape | mesh | mode | compute (s) | memory (s) | "
+           "collective (s) | dominant | HBM GB/dev | useful-FLOPs | "
+           "MFU bound |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for c in sorted(cells, key=lambda c: (c["arch"], c["shape"], c["mesh"])):
+        r = c["roofline"]
+        tag = c["binarize"] + ("+packed" if c.get("packed") else "")
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | {tag} "
+            f"| {_fmt(r['compute_s'])} | {_fmt(r['memory_s'])} "
+            f"| {_fmt(r['collective_s'])} | **{r['dominant']}** "
+            f"| {_fmt(c['memory']['peak_gb'])} "
+            f"| {_fmt(r['useful_flops_fraction'])} "
+            f"| {_fmt(r['mfu_bound'], 3)} |")
+    skip_rows = [
+        f"| {a} | {s} | both | — | skipped | skipped | skipped | — | — | — "
+        f"| — | <!-- {why} -->" for a, s, why in SKIPS]
+    return hdr + "\n".join(rows + skip_rows)
+
+
+def summary(cells) -> dict:
+    by_dom = {}
+    over_budget = []
+    for c in cells:
+        by_dom.setdefault(c["roofline"]["dominant"], 0)
+        by_dom[c["roofline"]["dominant"]] += 1
+        if c["memory"]["peak_gb"] > 17.18:  # 16 GiB
+            over_budget.append(
+                (c["arch"], c["shape"], c["mesh"], c["memory"]["peak_gb"]))
+    return {"cells": len(cells), "dominant_histogram": by_dom,
+            "over_hbm_budget": over_budget}
+
+
+def main(fast: bool = False) -> list[str]:
+    cells = load_cells()
+    if not cells:
+        return [csv_row("roofline/no_dryrun_cache", 0,
+                        "run python -m repro.launch.dryrun first")]
+    lines = []
+    for c in cells:
+        r = c["roofline"]
+        name = (f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}/"
+                f"{c['binarize']}{'+packed' if c.get('packed') else ''}")
+        lines.append(csv_row(
+            name, r["bound_time_s"] * 1e6,
+            f"dom={r['dominant']};mfu_bound={_fmt(r['mfu_bound'], 3)};"
+            f"hbm={_fmt(c['memory']['peak_gb'])}GB"))
+    s = summary(cells)
+    lines.append(csv_row("roofline/summary", s["cells"],
+                         f"dominant={s['dominant_histogram']};"
+                         f"over_budget={len(s['over_hbm_budget'])}"))
+    with open(os.path.join(RESULTS_DIR, "roofline_table.md"), "w") as f:
+        f.write(markdown_table(cells) + "\n")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,69 @@
+"""Paper Figs. 2-3 at example scale: det vs stoch vs no-regularizer learning
+curves on synthetic MNIST, printed as an ASCII chart.
+
+  PYTHONPATH=src python examples/binarize_comparison.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.core import binarize as B
+from repro.core.policy import BinarizePolicy, NONE_POLICY
+from repro.data import synthetic as syn
+from repro.models import mnist_fc
+from repro.optim import schedules
+from repro.optim.sgd import sgd_momentum
+from repro.train import steps as ST
+
+POLICY = BinarizePolicy(include=(r".*kernel$",),
+                        exclude=(r"layers/0/kernel", r"layers/2/kernel"))
+EPOCHS, SPE = 8, 25
+
+
+def curve(mode):
+    tree = mnist_fc.init(jax.random.key(0), hidden=(128, 128))
+    opt = sgd_momentum(schedules.paper_eq4(2e-2, SPE), momentum=0.9)
+    step = jax.jit(ST.make_train_step(
+        ST.make_classifier_loss(mnist_fc.apply), opt, mode,
+        POLICY if mode != "none" else NONE_POLICY, has_model_state=True))
+    state = ST.init_train_state(tree["params"], opt, model_state=tree["state"])
+    spec = syn.SyntheticSpec("mnist", n_train=SPE * 64, batch_size=64)
+    eval_fn = ST.make_eval_fn(mnist_fc.apply)
+    accs = []
+    for e in range(EPOCHS):
+        for i in range(SPE):
+            x, y = syn.train_batch(spec, e * SPE + i)
+            state, _ = step(state, {"x": x.reshape(64, -1), "y": y})
+        params, ms = state["params"], state["model_state"]
+        if mode != "none":
+            params = B.binarize_tree(params, "det", POLICY)
+            if mode == "stoch":
+                cal = [syn.train_batch(spec, 99_000 + j)[0].reshape(64, -1)
+                       for j in range(10)]
+                ms = ST.recalibrate_bn(mnist_fc.apply, params, ms, cal)
+        x, y = syn.eval_batch(spec)
+        _, acc = eval_fn(params, ms, x.reshape(-1, 784), y)
+        accs.append(float(acc))
+    return accs
+
+
+def main():
+    results = {m: curve(m) for m in ("none", "det", "stoch")}
+    print("\nvalidation accuracy per epoch")
+    print("epoch :", "  ".join(f"{e:5d}" for e in range(EPOCHS)))
+    for mode, accs in results.items():
+        print(f"{mode:6s}:", "  ".join(f"{a:5.3f}" for a in accs))
+    # paper's claim: binarized curves converge close to the baseline,
+    # needing somewhat more epochs
+    print("\nfinal-accuracy deltas vs no-regularizer "
+          "(paper: -0.94% det / -0.37% stoch on MNIST):")
+    for mode in ("det", "stoch"):
+        d = results[mode][-1] - results["none"][-1]
+        print(f"  {mode}: {d:+.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Quickstart: train a stochastically-binarized network (the paper's novel
+regime) on synthetic MNIST, evaluate its deterministic-sign inference
+network, and bitpack it for serving.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.core import binarize as B
+from repro.core.policy import BinarizePolicy
+from repro.data import synthetic as syn
+from repro.models import mnist_fc
+from repro.optim import schedules
+from repro.optim.sgd import sgd_momentum
+from repro.serve.engine import pack_params, packed_param_bytes
+from repro.train import steps as ST
+
+
+def main():
+    # 1. model + policy (BNN convention: first/last layers stay FP)
+    tree = mnist_fc.init(jax.random.key(0), hidden=(256, 256))
+    policy = BinarizePolicy(include=(r".*kernel$",),
+                            exclude=(r"layers/0/kernel", r"layers/2/kernel"))
+
+    # 2. Alg. 1 train step: binarize -> fwd/bwd -> update -> clip
+    opt = sgd_momentum(schedules.paper_eq4(1e-2, steps_per_epoch=50),
+                       momentum=0.9)
+    step = jax.jit(ST.make_train_step(
+        ST.make_classifier_loss(mnist_fc.apply), opt, "stoch", policy,
+        has_model_state=True))
+    state = ST.init_train_state(tree["params"], opt,
+                                model_state=tree["state"])
+
+    spec = syn.SyntheticSpec("mnist", n_train=3200, batch_size=64)
+    for i in range(300):
+        x, y = syn.train_batch(spec, i)
+        state, m = step(state, {"x": x.reshape(64, -1), "y": y})
+        if i % 50 == 0:
+            print(f"step {i:4d}  loss {float(m['loss']):.3f}  "
+                  f"acc {float(m['accuracy']):.3f}")
+
+    # 3. inference network: deterministic sign of the masters + BN recal
+    params_inf = B.binarize_tree(state["params"], "det", policy)
+    cal = [syn.train_batch(spec, 10_000 + j)[0].reshape(64, -1)
+           for j in range(20)]
+    ms = ST.recalibrate_bn(mnist_fc.apply, params_inf, state["model_state"],
+                           cal)
+    x, y = syn.eval_batch(spec)
+    loss, acc = ST.make_eval_fn(mnist_fc.apply)(params_inf, ms,
+                                                x.reshape(-1, 784), y)
+    print(f"\nvalidation: loss {float(loss):.3f}  accuracy {float(acc):.3f}")
+
+    # 4. pack for serving: 1 bit/weight for the binarized projections
+    packed = pack_params(state["params"], policy, "det")
+    dense_b, packed_b = packed_param_bytes(packed)
+    print(f"serving weights: {dense_b/1e6:.2f}MB dense bf16 -> "
+          f"{packed_b/1e6:.2f}MB packed ({dense_b/packed_b:.1f}x)")
+
+
+if __name__ == "__main__":
+    main()

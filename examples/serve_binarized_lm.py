@@ -1,0 +1,57 @@
+"""End-to-end serving driver: batched requests through the slot batcher
+against a binarized, bitpacked starcoder2-family model (smoke size), the
+TPU analogue of the paper's inference-time experiment.
+
+  PYTHONPATH=src python examples/serve_binarized_lm.py
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import base as cb
+from repro.core.policy import DEFAULT_POLICY
+from repro.models import transformer as T
+from repro.serve.batcher import SlotBatcher
+from repro.serve.engine import ServeEngine, pack_params, packed_param_bytes
+
+
+def serve(params, cfg, tag, requests=8, slots=4, prompt_len=16, max_new=8):
+    engine = ServeEngine(cfg, params)
+    batcher = SlotBatcher(slots, prompt_len)
+    rng = np.random.default_rng(0)
+    for _ in range(requests):
+        batcher.submit(rng.integers(0, cfg.vocab_size, prompt_len), max_new)
+    t0 = time.perf_counter()
+    while not batcher.idle:
+        batcher.refill()
+        out = engine.generate(jax.numpy.asarray(batcher.prompts()), max_new)
+        for step_tok in np.asarray(out.tokens).T:
+            batcher.record(step_tok)
+    batcher.refill()
+    dt = time.perf_counter() - t0
+    print(f"{tag:>14s}: {len(batcher.completed)} requests, "
+          f"{dt:.2f}s total, {dt/requests*1e3:.0f} ms/req")
+    return dt
+
+
+def main():
+    cfg = cb.get_config("starcoder2_3b", smoke=True)
+    params = T.init_lm(cfg, jax.random.key(0))
+
+    serve(params, cfg, "dense f32")
+
+    packed = pack_params(params, DEFAULT_POLICY, "det")
+    dense_b, packed_b = packed_param_bytes(packed)
+    print(f"packed projections: {dense_b/1e6:.1f}MB -> {packed_b/1e6:.1f}MB "
+          f"({dense_b/packed_b:.1f}x fewer weight bytes => the HBM-bound "
+          f"decode roofline term drops by the same factor on TPU)")
+    serve(packed, cfg, "packed binary")
+
+
+if __name__ == "__main__":
+    main()

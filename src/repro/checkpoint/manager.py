@@ -1,0 +1,137 @@
+"""Checkpoint manager: atomic, asynchronous, keep-k, resume-from-latest.
+
+Format: one ``step_<N>/arrays.npz`` per checkpoint (leaves keyed by their
+tree path) plus ``meta.json``; a ``COMMITTED`` marker file is written last
+so a crash mid-write can never produce a checkpoint that ``latest_step``
+would pick up (atomicity via marker + directory rename). An optional
+background thread makes ``save`` non-blocking so checkpoint I/O overlaps
+training compute (the fault-tolerance requirement at pod scale).
+
+Restore takes a *template* pytree (from ``init``) and returns it with leaf
+values replaced — structure/dtype mismatches fail loudly. Restoring onto a
+different mesh/device count is handled by ``repro.ft.elastic``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_MARKER = "COMMITTED"
+
+
+def _path_str(path) -> str:
+    from repro.core.binarize import _path_str as ps
+    return ps(path)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- write --------------------------------------------------------------
+    def save(self, step: int, tree: Any, metadata: Optional[dict] = None,
+             block: bool = False) -> None:
+        # Snapshot to host memory synchronously (cheap), write in background.
+        leaves_with_paths = jax.tree_util.tree_leaves_with_path(tree)
+
+        def to_host(v):
+            if hasattr(v, "dtype") and jax.dtypes.issubdtype(
+                    v.dtype, jax.dtypes.prng_key):
+                v = jax.random.key_data(v)
+            return np.asarray(jax.device_get(v))
+
+        host = {_path_str(p): to_host(v) for p, v in leaves_with_paths}
+        meta = dict(metadata or {}, step=int(step), time=time.time(),
+                    n_leaves=len(host))
+        self.wait()  # one in-flight save at a time
+        if self.async_save and not block:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host, meta), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host, meta)
+
+    def _write(self, step: int, host: dict, meta: dict) -> None:
+        final = os.path.join(self.directory, f"step_{step:010d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"), **host)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        with open(os.path.join(tmp, _MARKER), "w") as f:
+            f.write("ok")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    # -- read ---------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in sorted(os.listdir(self.directory)):
+            full = os.path.join(self.directory, name)
+            if (name.startswith("step_") and not name.endswith(".tmp")
+                    and os.path.exists(os.path.join(full, _MARKER))):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None) -> Any:
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {self.directory}")
+        path = os.path.join(self.directory, f"step_{step:010d}", "arrays.npz")
+        data = np.load(path)
+        leaves_with_paths = jax.tree_util.tree_leaves_with_path(template)
+        new_leaves = []
+        for p, leaf in leaves_with_paths:
+            key = _path_str(p)
+            if key not in data:
+                raise KeyError(f"checkpoint missing leaf {key}")
+            arr = data[key]
+            is_key = hasattr(leaf, "dtype") and jax.dtypes.issubdtype(
+                leaf.dtype, jax.dtypes.prng_key)
+            if not is_key and tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(
+                    f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                    f"template {leaf.shape}")
+            if is_key:
+                new_leaves.append(jax.random.wrap_key_data(
+                    jax.numpy.asarray(arr)))
+            else:
+                new_leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+        treedef = jax.tree_util.tree_structure(template)
+        return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+    def read_meta(self, step: Optional[int] = None) -> dict:
+        step = self.latest_step() if step is None else step
+        with open(os.path.join(self.directory, f"step_{step:010d}",
+                               "meta.json")) as f:
+            return json.load(f)

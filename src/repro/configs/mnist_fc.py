@@ -1,0 +1,8 @@
+"""The paper's permutation-invariant FC network for MNIST (784-2048x3-10)."""
+HIDDEN = (2048, 2048, 2048)
+SMOKE_HIDDEN = (128, 128)
+# Paper training recipe (section III-A):
+BATCH_SIZE = 4          # fixed by the DE1-SoC resource budget in the paper
+LEARNING_RATE = 1e-3    # eta[0]
+MOMENTUM = 0.9
+EPOCHS = 200

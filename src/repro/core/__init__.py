@@ -1,0 +1,17 @@
+"""Core: the paper's technique (binary weight regularization) + analysis tools."""
+from repro.core.binarize import (
+    BinarizeMode,
+    binarize_tree,
+    clip_tree,
+    clip_weights,
+    deterministic_binarize,
+    hard_sigmoid,
+    stochastic_binarize,
+)
+from repro.core.policy import DEFAULT_POLICY, NONE_POLICY, BinarizePolicy
+
+__all__ = [
+    "BinarizeMode", "binarize_tree", "clip_tree", "clip_weights",
+    "deterministic_binarize", "hard_sigmoid", "stochastic_binarize",
+    "BinarizePolicy", "DEFAULT_POLICY", "NONE_POLICY",
+]

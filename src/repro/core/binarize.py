@@ -1,0 +1,184 @@
+"""Binary weight regularization (the paper's core technique).
+
+Implements, as composable JAX transforms:
+
+* Eq. (1)  deterministic binarization   w_b = sign(w)  (with sign(0) = -1,
+  matching the paper's ``w <= 0 -> -1`` convention),
+* Eq. (2)  stochastic binarization      P(w_b = +1) = sigma(w),
+* Eq. (3)  hard sigmoid                 sigma(x) = clip((x+1)/2, 0, 1),
+* Alg. (1) the BinaryConnect training algorithm: real-valued *master* weights
+  are binarized on every forward/backward pass, gradients flow through the
+  binarization via a straight-through estimator (STE), master weights are
+  clipped to [-1, +1] after each update.
+
+All functions are pure and jit/vmap/pjit friendly; the stochastic path is
+keyed explicitly (deterministic given a key) so training steps stay
+reproducible and resumable.
+"""
+from __future__ import annotations
+
+import enum
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+class BinarizeMode(enum.Enum):
+    """Which regularizer Alg. 1's ``binarize()`` uses."""
+
+    NONE = "none"
+    DETERMINISTIC = "det"
+    STOCHASTIC = "stoch"
+
+    @classmethod
+    def parse(cls, value: "BinarizeMode | str | None") -> "BinarizeMode":
+        if value is None:
+            return cls.NONE
+        if isinstance(value, cls):
+            return value
+        for m in cls:
+            if value in (m.value, m.name, m.name.lower()):
+                return m
+        raise ValueError(f"unknown binarize mode: {value!r}")
+
+
+def hard_sigmoid(x: jax.Array) -> jax.Array:
+    """Eq. (3): sigma(x) = clip((x+1)/2, 0, 1)."""
+    return jnp.clip((x + 1.0) / 2.0, 0.0, 1.0)
+
+
+def clip_weights(w: jax.Array, lo: float = -1.0, hi: float = 1.0) -> jax.Array:
+    """Alg. (1) step 4: w <- clip(w). Keeps master weights inside the region
+    where the stochastic projection (Eq. 2) has non-degenerate probability."""
+    return jnp.clip(w, lo, hi)
+
+
+def deterministic_binarize(w: jax.Array) -> jax.Array:
+    """Eq. (1): w_b = -1 if w <= 0 else +1, in w's dtype."""
+    return jnp.where(w > 0, 1.0, -1.0).astype(w.dtype)
+
+
+def stochastic_binarize(w: jax.Array, key: jax.Array) -> jax.Array:
+    """Eq. (2): w_b = +1 with probability hard_sigmoid(w), else -1."""
+    p = hard_sigmoid(w.astype(jnp.float32))
+    u = jax.random.uniform(key, w.shape, jnp.float32)
+    return jnp.where(u < p, 1.0, -1.0).astype(w.dtype)
+
+
+@jax.custom_vjp
+def _ste_identity(w_master: jax.Array, w_b: jax.Array) -> jax.Array:
+    """Returns w_b in the forward pass; routes the cotangent to w_master.
+
+    This is the straight-through estimator of Alg. (1): dC/dw_b is accumulated
+    directly onto the real-valued weight (the saturation of the STE — zeroing
+    the gradient outside [-1, 1] — is provided by ``clip_weights`` on the
+    master copy, exactly as the paper's step 4 does)."""
+    del w_master
+    return w_b
+
+
+def _ste_fwd(w_master, w_b):
+    return w_b, None
+
+
+def _ste_bwd(_, g):
+    # Gradient w.r.t. the master weight is the gradient w.r.t. the binary
+    # weight (straight-through); the binary tensor itself is non-differentiable.
+    return g, jnp.zeros_like(g)
+
+
+_ste_identity.defvjp(_ste_fwd, _ste_bwd)
+
+
+def binarize(
+    w: jax.Array,
+    mode: BinarizeMode | str,
+    key: jax.Array | None = None,
+) -> jax.Array:
+    """Alg. (1) ``binarize()``: differentiable-through binarization of a
+    master weight.
+
+    Args:
+      w: real-valued master weight (any float dtype).
+      mode: NONE (identity), DETERMINISTIC (Eq. 1) or STOCHASTIC (Eq. 2).
+      key: PRNG key, required iff mode is STOCHASTIC.
+
+    Returns:
+      Tensor of the same shape/dtype whose *values* are in {-1, +1} (for the
+      binarized modes) and whose vjp routes gradients to ``w`` unchanged.
+    """
+    mode = BinarizeMode.parse(mode)
+    if mode is BinarizeMode.NONE:
+        return w
+    if mode is BinarizeMode.DETERMINISTIC:
+        w_b = deterministic_binarize(jax.lax.stop_gradient(w))
+    else:
+        if key is None:
+            raise ValueError("stochastic binarization requires a PRNG key")
+        w_b = stochastic_binarize(jax.lax.stop_gradient(w), key)
+    return _ste_identity(w, w_b)
+
+
+# ---------------------------------------------------------------------------
+# Pytree-level API: binarize a whole parameter tree under a policy.
+# ---------------------------------------------------------------------------
+
+def binarize_tree(
+    params: Any,
+    mode: BinarizeMode | str,
+    policy,
+    key: jax.Array | None = None,
+) -> Any:
+    """Applies ``binarize`` to every leaf selected by ``policy``.
+
+    ``policy`` is a ``repro.core.policy.BinarizePolicy`` (or anything with a
+    ``selects(path) -> bool``). Unselected leaves pass through untouched.
+    Each selected leaf gets an independent fold of the key (stable in the
+    tree-path ordering, so the step is reproducible)."""
+    mode = BinarizeMode.parse(mode)
+    if mode is BinarizeMode.NONE:
+        return params
+
+    leaves_with_paths = jax.tree_util.tree_leaves_with_path(params)
+    selected = [policy.selects(_path_str(p)) for p, _ in leaves_with_paths]
+    n_selected = sum(selected)
+
+    keys: list = [None] * len(leaves_with_paths)
+    if mode is BinarizeMode.STOCHASTIC:
+        if key is None:
+            raise ValueError("stochastic binarization requires a PRNG key")
+        subkeys = jax.random.split(key, max(n_selected, 1))
+        it = iter(subkeys)
+        keys = [next(it) if s else None for s in selected]
+
+    out_leaves = []
+    for (path, leaf), sel, k in zip(leaves_with_paths, selected, keys):
+        out_leaves.append(binarize(leaf, mode, k) if sel else leaf)
+    treedef = jax.tree_util.tree_structure(params)
+    return jax.tree_util.tree_unflatten(treedef, out_leaves)
+
+
+def clip_tree(params: Any, policy) -> Any:
+    """Alg. (1) step 4 over a pytree: clip selected master weights to [-1,1]."""
+    leaves_with_paths = jax.tree_util.tree_leaves_with_path(params)
+    out = [
+        clip_weights(leaf) if policy.selects(_path_str(path)) else leaf
+        for path, leaf in leaves_with_paths
+    ]
+    treedef = jax.tree_util.tree_structure(params)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for entry in path:
+        if hasattr(entry, "key"):
+            parts.append(str(entry.key))
+        elif hasattr(entry, "idx"):
+            parts.append(str(entry.idx))
+        elif hasattr(entry, "name"):
+            parts.append(str(entry.name))
+        else:  # pragma: no cover - future jax path entry kinds
+            parts.append(str(entry))
+    return "/".join(parts)

@@ -1,0 +1,70 @@
+"""Binarization policy: which parameters Alg. (1) binarizes.
+
+Follows the BinaryConnect / BNN-literature convention the paper inherits:
+projection ("matmul-shaped") weights are binarized; embeddings, norms,
+biases, MoE routers, SSM state-dynamics parameters and (optionally) the LM
+head stay full precision. The policy is path-pattern based so configs can
+override it per architecture.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Sequence
+
+
+# Leaf-name suffixes that are *always* excluded (non-matmul params).
+_DEFAULT_EXCLUDE = (
+    r".*(^|/)(embed|embedding|pos_embed|frontend)(/|$).*",
+    r".*(scale|gamma|beta|bias)$",
+    r".*(^|/)(ln|norm|rmsnorm|batchnorm|bn)[^/]*(/|$).*",
+    r".*(^|/)router(/|$).*",
+    r".*(^|/)(A_log|dt_bias|D|conv)(/|$).*",   # SSM dynamics + depthwise conv
+    r".*(^|/)lm_head(/|$).*",
+)
+
+# What is binarized: 2-D+ projection kernels.
+_DEFAULT_INCLUDE = (
+    r".*(kernel|w_qkv|w_o|w_q|w_k|w_v|wi|wo|w_gate|w_up|w_down|in_proj|out_proj|x_proj)$",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class BinarizePolicy:
+    """Selects parameter-tree paths for binarization.
+
+    A path is selected iff it matches any ``include`` pattern and no
+    ``exclude`` pattern. Paths are '/'-joined key paths, e.g.
+    ``layers/attn/w_qkv``.
+    """
+
+    include: Sequence[str] = _DEFAULT_INCLUDE
+    exclude: Sequence[str] = _DEFAULT_EXCLUDE
+
+    def __post_init__(self):
+        object.__setattr__(self, "_inc", tuple(re.compile(p) for p in self.include))
+        object.__setattr__(self, "_exc", tuple(re.compile(p) for p in self.exclude))
+
+    def selects(self, path: str) -> bool:
+        if not any(p.fullmatch(path) for p in self._inc):
+            return False
+        return not any(p.fullmatch(path) for p in self._exc)
+
+    def selected_paths(self, params) -> list[str]:
+        import jax
+
+        out = []
+        for path, _ in jax.tree_util.tree_leaves_with_path(params):
+            from repro.core.binarize import _path_str
+
+            s = _path_str(path)
+            if self.selects(s):
+                out.append(s)
+        return out
+
+
+#: Paper-faithful default policy.
+DEFAULT_POLICY = BinarizePolicy()
+
+#: Binarize nothing (the paper's "No Regularizer" baseline).
+NONE_POLICY = BinarizePolicy(include=())

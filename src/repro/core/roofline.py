@@ -1,0 +1,132 @@
+"""Three-term roofline model for TPU v5e from compiled-HLO analysis.
+
+    compute    = FLOPs            / (chips * PEAK_FLOPS)
+    memory     = bytes            / (chips * HBM_BW)
+    collective = collective_bytes / (chips * ICI_BW)
+
+FLOPs / bytes / collective_bytes come from ``core.hlo_analysis.analyze`` run
+on the per-device SPMD-partitioned module, so they are *already* per-chip:
+the `/chips` division is therefore applied only to analytically-derived
+whole-model quantities (MODEL_FLOPS), and the HLO-derived terms use the
+per-device numbers directly. Both conventions are kept explicit below.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+# TPU v5e hardware constants (per chip).
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW = 50e9                   # B/s per link (per the assignment)
+
+# Energy proxy constants for the paper's power comparison (Table I analogue).
+# Order-of-magnitude figures for a 5nm-class accelerator: ~0.6 pJ/bf16-FLOP at
+# the MXU, ~6 pJ/HBM byte, ~3 pJ/ICI byte. Used ONLY for the derived-energy
+# column, clearly labeled as a model, never as a measurement.
+PJ_PER_FLOP = 0.6e-12
+PJ_PER_HBM_BYTE = 6e-12
+PJ_PER_ICI_BYTE = 3e-12
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    """Per-step roofline terms, all in seconds (per device)."""
+
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    chips: int
+    model_flops: Optional[float] = None    # analytic 6ND / 2ND, whole model
+    hbm_bytes_per_device: Optional[float] = None  # from memory_analysis
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time_s(self) -> float:
+        """Lower-bound step time: max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def no_overlap_time_s(self) -> float:
+        return self.compute_s + self.memory_s + self.collective_s
+
+    @property
+    def useful_flops_fraction(self) -> Optional[float]:
+        """MODEL_FLOPS / total HLO FLOPs — catches remat/redundancy waste."""
+        if self.model_flops is None or self.flops_per_device <= 0:
+            return None
+        return self.model_flops / (self.flops_per_device * self.chips)
+
+    @property
+    def mfu_bound(self) -> Optional[float]:
+        """Model-FLOPs utilization upper bound implied by the roofline."""
+        if self.model_flops is None or self.bound_time_s <= 0:
+            return None
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS_BF16)
+        return ideal / self.bound_time_s
+
+    def energy_joules(self) -> float:
+        """Derived energy proxy per step per device (labeled model, not
+        measurement) — the Table-I power analogue."""
+        return (self.flops_per_device * PJ_PER_FLOP
+                + self.bytes_per_device * PJ_PER_HBM_BYTE
+                + self.collective_bytes_per_device * PJ_PER_ICI_BYTE)
+
+    def as_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "bound_time_s": self.bound_time_s,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "chips": self.chips,
+            "model_flops": self.model_flops,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "mfu_bound": self.mfu_bound,
+            "hbm_bytes_per_device": self.hbm_bytes_per_device,
+            "energy_joules_per_device": self.energy_joules(),
+        }
+
+
+def from_hlo_cost(
+    cost,
+    chips: int,
+    model_flops: Optional[float] = None,
+    hbm_bytes_per_device: Optional[float] = None,
+) -> RooflineTerms:
+    """Builds terms from a ``hlo_analysis.HloCost`` of the per-device module."""
+    return RooflineTerms(
+        compute_s=cost.flops / PEAK_FLOPS_BF16,
+        memory_s=cost.bytes / HBM_BW,
+        collective_s=cost.collective_bytes / ICI_BW,
+        flops_per_device=cost.flops,
+        bytes_per_device=cost.bytes,
+        collective_bytes_per_device=cost.collective_bytes,
+        chips=chips,
+        model_flops=model_flops,
+        hbm_bytes_per_device=hbm_bytes_per_device,
+    )
+
+
+def model_flops_train(n_params_active: float, n_tokens: float) -> float:
+    """6 * N * D (fwd 2ND + bwd 4ND) per step."""
+    return 6.0 * n_params_active * n_tokens
+
+
+def model_flops_infer(n_params_active: float, n_tokens: float) -> float:
+    """2 * N * D per forward."""
+    return 2.0 * n_params_active * n_tokens

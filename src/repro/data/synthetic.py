@@ -1,0 +1,102 @@
+"""Deterministic synthetic datasets (the container is offline — see
+DESIGN.md §8.3).
+
+Three generators, all shape-compatible with the real datasets they stand in
+for and all *step-indexed*: batch ``i`` is a pure function of (seed, i), so
+a restarted trainer reproduces the exact batch stream with no data-state
+checkpointing (this is also the straggler story: any host can regenerate any
+batch).
+
+* ``mnist_like``    — 784-dim, 10 classes: class-conditional prototypes +
+                      noise, linearly-separable-ish so learning curves are
+                      meaningful (det/stoch/none comparisons transfer).
+* ``cifar_like``    — (32, 32, 3), 10 classes: prototype images with
+                      structured (low-frequency) noise.
+* ``lm_tokens``     — token streams with Zipf-ish marginals and a Markov
+                      flavour so perplexity decreases under training.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+N_CLASSES = 10
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticSpec:
+    kind: str                 # "mnist" | "cifar" | "lm"
+    n_train: int
+    batch_size: int
+    seq_len: int = 0
+    vocab_size: int = 0
+    seed: int = 0
+
+    @property
+    def steps_per_epoch(self) -> int:
+        return max(self.n_train // self.batch_size, 1)
+
+
+def _class_key(seed: int) -> jax.Array:
+    return jax.random.key(seed ^ 0x5EED)
+
+
+def mnist_like(spec: SyntheticSpec, step: int | jax.Array):
+    """-> (images (B, 784) f32 in [0,1], labels (B,) int32)."""
+    proto = jax.random.uniform(_class_key(spec.seed), (N_CLASSES, 784))
+    key = jax.random.fold_in(jax.random.key(spec.seed), step)
+    k1, k2 = jax.random.split(key)
+    labels = jax.random.randint(k1, (spec.batch_size,), 0, N_CLASSES)
+    noise = 0.35 * jax.random.normal(k2, (spec.batch_size, 784))
+    x = jnp.clip(proto[labels] + noise, 0.0, 1.0)
+    return x, labels
+
+
+def cifar_like(spec: SyntheticSpec, step: int | jax.Array):
+    """-> (images (B, 32, 32, 3) f32, labels (B,) int32)."""
+    proto = jax.random.uniform(_class_key(spec.seed + 1), (N_CLASSES, 8, 8, 3))
+    proto = jax.image.resize(proto, (N_CLASSES, 32, 32, 3), "linear")
+    key = jax.random.fold_in(jax.random.key(spec.seed + 1), step)
+    k1, k2 = jax.random.split(key)
+    labels = jax.random.randint(k1, (spec.batch_size,), 0, N_CLASSES)
+    lowf = jax.random.normal(k2, (spec.batch_size, 8, 8, 3))
+    noise = 0.25 * jax.image.resize(lowf, (spec.batch_size, 32, 32, 3), "linear")
+    x = jnp.clip(proto[labels] + noise, 0.0, 1.0)
+    return x, labels
+
+
+def lm_tokens(spec: SyntheticSpec, step: int | jax.Array):
+    """-> (tokens (B, S+1) int32); inputs = [:, :-1], labels = [:, 1:].
+
+    Zipf marginal with a deterministic bigram drift: learnable structure."""
+    key = jax.random.fold_in(jax.random.key(spec.seed + 2), step)
+    k1, k2 = jax.random.split(key)
+    b, s, v = spec.batch_size, spec.seq_len + 1, spec.vocab_size
+    # Zipf via inverse-CDF on uniform
+    u = jax.random.uniform(k1, (b, s), minval=1e-6)
+    ranks = jnp.floor(jnp.power(u, -1.0 / 1.1)) % v
+    base = ranks.astype(jnp.int32)
+    # deterministic bigram flavour: every other token correlates with previous
+    shifted = jnp.roll(base, 1, axis=1)
+    mix = jax.random.bernoulli(k2, 0.3, (b, s))
+    toks = jnp.where(mix, (shifted * 7 + 13) % v, base)
+    return toks
+
+
+def eval_batch(spec: SyntheticSpec, step: int = 10_000_000):
+    """A held-out batch (step index far outside the training range)."""
+    if spec.kind == "mnist":
+        return mnist_like(spec, step)
+    if spec.kind == "cifar":
+        return cifar_like(spec, step)
+    return lm_tokens(spec, step)
+
+
+def train_batch(spec: SyntheticSpec, step: int | jax.Array):
+    if spec.kind == "mnist":
+        return mnist_like(spec, step)
+    if spec.kind == "cifar":
+        return cifar_like(spec, step)
+    return lm_tokens(spec, step)

@@ -1,0 +1,102 @@
+"""GPipe-style pipeline parallelism with ``shard_map`` + ``ppermute``.
+
+Layers are split into S stages along a ``stage`` mesh axis; a step streams M
+microbatches through the stages in S + M - 1 ticks. Per tick every device
+runs its stage on its current activation and forwards the result to the next
+stage with ``lax.ppermute`` (the collective-permute on the TPU ICI torus —
+neighbour exchange, the cheapest possible collective), overlapping each
+stage's compute with its neighbour's: the canonical compute/comm-overlap
+trick at pod scale.
+
+The implementation is deliberately self-contained (activation-shape-
+preserving stage fns) — it is used by tests and the PP example, and is the
+config-selectable alternative to pure DPxTP for deep archs (80-layer
+internvl2 / 72-layer jamba) where TP collectives saturate before compute.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def pipeline_forward(
+    stage_fn: Callable,          # (stage_params, x) -> y  (same shape)
+    n_stages: int,
+    axis_name: str = "stage",
+):
+    """Builds the per-device pipelined forward to run under ``shard_map``.
+
+    Call with stage-stacked params (leading dim = n_stages, sharded over the
+    stage axis, one slice per device) and microbatched input
+    (n_micro, mb, ...) replicated per stage; returns (n_micro, mb, ...)
+    outputs valid on the *last* stage (other stages return zeros)."""
+
+    def per_device(stage_params, micro):  # micro: (n_micro, mb, ...)
+        stage_params = jax.tree.map(lambda a: a[0], stage_params)  # local slice
+        stage = jax.lax.axis_index(axis_name)
+        n_micro = micro.shape[0]
+        ticks = n_micro + n_stages - 1
+        perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+        def body(t, carry):
+            buf, outputs = carry
+            # stage 0 ingests microbatch t (when in range); others use buf
+            mb_idx = jnp.clip(t, 0, n_micro - 1)
+            inp = jnp.where(stage == 0, micro[mb_idx], buf)
+            out = stage_fn(stage_params, inp)
+            # last stage emits microbatch (t - (n_stages - 1))
+            out_idx = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
+            emit = jnp.logical_and(stage == n_stages - 1,
+                                   t >= n_stages - 1)
+            outputs = jax.lax.cond(
+                emit,
+                lambda o: o.at[out_idx].set(out),
+                lambda o: o,
+                outputs)
+            # forward activations to the next stage
+            buf = jax.lax.ppermute(out, axis_name, perm)
+            return buf, outputs
+
+        buf0 = jnp.zeros_like(micro[0])
+        outs0 = jnp.zeros_like(micro)
+        _, outputs = jax.lax.fori_loop(0, ticks, body, (buf0, outs0))
+        return outputs
+
+    return per_device
+
+
+def run_pipeline(mesh: Mesh, stage_fn: Callable, stage_params, micro,
+                 axis_name: str = "stage"):
+    """Convenience wrapper: shard_map the pipelined forward over ``mesh``.
+
+    ``stage_params`` leaves have leading dim n_stages; ``micro`` is
+    (n_micro, mb, ...). Returns (n_micro, mb, ...) gathered outputs."""
+    n_stages = mesh.shape[axis_name]
+    fwd = pipeline_forward(stage_fn, n_stages, axis_name)
+    pspec_params = jax.tree.map(lambda _: P(axis_name), stage_params)
+    out = jax.shard_map(
+        fwd, mesh=mesh,
+        in_specs=(pspec_params, P()),
+        out_specs=P(axis_name),   # (stage, n_micro, mb, ...): last stage valid
+        check_vma=False,
+    )(stage_params, micro)
+    # out has a leading stage axis from out_specs; take the last stage's copy
+    n_micro = micro.shape[0]
+    return out.reshape((n_stages, n_micro) + micro.shape[1:])[-1]
+
+
+def reference_forward(stage_fn: Callable, stage_params, micro):
+    """Serial oracle: apply all stages to every microbatch."""
+    n_stages = jax.tree.leaves(stage_params)[0].shape[0]
+
+    def one(x):
+        for s in range(n_stages):
+            p = jax.tree.map(lambda a: a[s], stage_params)
+            x = stage_fn(p, x)
+        return x
+
+    return jax.vmap(one)(micro)

@@ -1,0 +1,163 @@
+"""Sharding rules: logical-axis -> mesh-axis mapping (DP / TP / FSDP / EP / SP).
+
+Models are written against *logical* activation/parameter axes and call
+``ShardCtx.act(x, kind)`` at block boundaries; the context resolves the kind
+to a ``PartitionSpec`` for the active mesh (or no-ops on a single device, so
+smoke tests never touch device state).
+
+Conventions (single-pod mesh ("data", "model"), multi-pod ("pod", "data",
+"model")):
+
+* batch dims           -> ("pod", "data")                  [DP]
+* d_ff / expert dims   -> "model"                          [Megatron TP —
+  d_ff % 16 == 0 holds for every assigned arch; asserted in tests]
+* flattened heads*hd   -> "model"  (avoids head-count divisibility issues
+  for the 24/40/56-head archs)
+* experts              -> "model" when n_experts % 16 == 0 else unsharded
+* KV-cache             -> batch over "data", sequence over "model"
+  (flash-decoding-style sharded attention; XLA inserts the softmax combine)
+* params               -> TP dim over "model"; with FSDP also shard the
+  largest replicated dim over "data" (ZeRO-3)
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def batch_axes(mesh: Optional[Mesh]) -> tuple:
+    if mesh is None:
+        return ("data",)
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+@dataclasses.dataclass
+class ShardCtx:
+    """Activation-sharding helper threaded through model code."""
+
+    mesh: Optional[Mesh] = None
+    enable: bool = True
+
+    def _p(self, *spec) -> Optional[P]:
+        return P(*spec)
+
+    def act(self, x: jax.Array, kind: str) -> jax.Array:
+        """Applies a with_sharding_constraint for a logical activation kind."""
+        if not self.enable or self.mesh is None:
+            return x
+        dp = batch_axes(self.mesh)
+        specs = {
+            # Residual stream: seq over "model" = Megatron sequence
+            # parallelism — GSPMD inserts the SP all-gather before each
+            # TP block and the reduce-scatter after it, and the per-layer
+            # scan carry (the remat-saved activation) shrinks by the TP
+            # degree. See EXPERIMENTS.md §Perf iteration 1.
+            "btd": P(dp, "model", None),       # (batch, seq, d_model)
+            "btf": P(dp, None, "model"),       # (batch, seq, d_ff)
+            "btq": P(dp, None, "model"),       # (batch, seq, heads*hd)
+            "bthd": P(dp, None, "model", None),# (batch, seq, heads, hd)
+            "btv": P(dp, None, "model"),       # logits (vocab TP-sharded)
+            "bte": P(dp, None, None),          # router logits (small)
+            "ecd": P(None, dp, "model"),       # MoE buffer (E, cap, d)
+            "ecf": P(None, dp, "model"),       # MoE hidden (E, cap, f)
+            "a": P(dp),                        # MoE assignment vectors (T*k,)
+            "ad": P(dp, "model"),              # MoE per-assignment acts
+            "btn": P(dp, None, "model"),       # ssm inner (batch, seq, d_inner)
+            "bsh": P(dp, None, "model"),       # ssm dt (batch, seq, heads)
+            "bcqqh": P(dp, None, None, None, "model"),  # SSD decay blocks
+            "bchpn": P(dp, None, "model", None, None),  # SSD chunk states
+            "cache_kv": P(None, dp, "model", None, None),  # (L, B, S, kv, hd)
+            "ssm_state": P(None, dp, "model", None, None), # (L, B, heads, hp, N)
+        }
+        spec = specs.get(kind)
+        if spec is None:
+            return x
+        spec = P(*spec[: x.ndim])
+        try:
+            return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+        except (ValueError, TypeError):
+            return x
+
+
+# ---------------------------------------------------------------------------
+# Parameter PartitionSpecs, generated from tree paths by pattern rules.
+# ---------------------------------------------------------------------------
+
+# (path regex, spec builder given ndim). Later rules win.
+def _pspec_rules(fsdp: bool, dp_axes=("data",)):
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+    def rule(last_model_dim, fsdp_dim=None):
+        def build(ndim: int):
+            spec = [None] * ndim
+            if last_model_dim is not None:
+                spec[last_model_dim % ndim] = "model"
+            if fsdp and fsdp_dim is not None and (fsdp_dim % ndim) != (
+                    (last_model_dim or 0) % ndim if last_model_dim is not None else -99):
+                spec[fsdp_dim % ndim] = dp
+            return P(*spec)
+        return build
+
+    return [
+        (re.compile(r".*embed.*"), rule(-1, -2)),           # (V, D): TP on D? keep V
+        (re.compile(r".*lm_head.*"), rule(-1, -2)),          # (D, V): vocab TP
+        (re.compile(r".*(scale|gamma|beta|bias|A_log|dt_bias|D)$"), rule(None)),
+        (re.compile(r".*router.*"), rule(None, -2)),
+        (re.compile(r".*w_qkv$"), rule(-1, -2)),             # (.., D, q+2kv): TP out
+        (re.compile(r".*w_o$"), rule(-2, -1)),               # (.., q, D): TP in
+        (re.compile(r".*w_(gate|up)$"), rule(-1, -2)),       # (.., D, F)
+        (re.compile(r".*wi$"), rule(-1, -2)),
+        (re.compile(r".*w_down$"), rule(-2, -1)),            # (.., F, D)
+        (re.compile(r".*wo$"), rule(-2, -1)),
+        (re.compile(r".*in_proj$"), rule(-1, -2)),           # ssm
+        (re.compile(r".*out_proj$"), rule(-2, -1)),
+        (re.compile(r".*conv$"), rule(-1)),                  # depthwise (w, d_inner)
+    ]
+
+
+def params_pspecs(params, fsdp: bool = False, dp_axes=("data",)):
+    """PartitionSpec tree matching ``params`` by path patterns.
+
+    ``dp_axes``: the data-parallel mesh axes FSDP shards over — on the
+    multi-pod mesh this must include "pod" (32-way ZeRO-3, not 16)."""
+    rules = _pspec_rules(fsdp, dp_axes)
+
+    def spec_for(path, leaf):
+        from repro.core.binarize import _path_str
+
+        s = _path_str(path)
+        ndim = getattr(leaf, "ndim", 0)
+        chosen = P()
+        for pat, build in rules:
+            if pat.fullmatch(s):
+                chosen = build(ndim) if ndim else P()
+        # sanity: spec rank must not exceed leaf rank
+        if len(chosen) > ndim:
+            chosen = P(*list(chosen)[:ndim])
+        return chosen
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def shardings_from_pspecs(mesh: Mesh, pspecs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def divisibility_report(cfg, n_model: int = 16) -> dict:
+    """Which dims shard cleanly over the model axis (documented invariant)."""
+    return {
+        "d_ff": cfg.d_ff % n_model == 0 if cfg.d_ff else True,
+        "q_dim": cfg.q_dim % n_model == 0 if cfg.has_attention else True,
+        "kv_dim": cfg.kv_dim % n_model == 0 if cfg.has_attention else True,
+        "d_inner": (cfg.d_inner % n_model == 0) if cfg.ssm_state else True,
+        "experts": (cfg.n_experts % n_model == 0) if cfg.n_experts else True,
+        "vocab": cfg.vocab_size % n_model == 0,
+    }

@@ -1,0 +1,54 @@
+"""Straggler detection and mitigation.
+
+In lockstep SPMD, one slow host delays every collective. The framework's
+mitigations, in order of escalation:
+
+1. **Prefetch** (data/pipeline.Prefetcher): host-side batch generation never
+   blocks the device — transient input-pipeline stalls are absorbed.
+2. **Skip-ahead** (data/pipeline.skip_ahead): a worker that falls behind
+   after a local stall can jump to the fleet's step counter with no peer
+   coordination, because batches are pure functions of their index.
+3. **Detection -> eviction**: ``StragglerMonitor`` keeps a rolling step-time
+   distribution; a host whose step time exceeds ``threshold`` x median for
+   ``patience`` consecutive steps is flagged for eviction, after which the
+   job restarts on the surviving hosts via ft.elastic (checkpoint-reshard).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import statistics
+from typing import Deque, Optional
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    window: int = 50
+    threshold: float = 3.0
+    patience: int = 5
+
+    def __post_init__(self):
+        self._times: Deque[float] = collections.deque(maxlen=self.window)
+        self._consecutive = 0
+
+    def record(self, step_time_s: float) -> None:
+        self._times.append(step_time_s)
+
+    @property
+    def median(self) -> Optional[float]:
+        if len(self._times) < max(5, self.window // 5):
+            return None
+        return statistics.median(self._times)
+
+    def is_straggling(self, step_time_s: float) -> bool:
+        """Call per step with the *local* step time; returns True once the
+        slow-step streak exceeds patience (=> evict / re-mesh)."""
+        med = self.median
+        self.record(step_time_s)
+        if med is None:
+            return False
+        if step_time_s > self.threshold * med:
+            self._consecutive += 1
+        else:
+            self._consecutive = 0
+        return self._consecutive >= self.patience

@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (binary matmul,
+fused binarize+pack) with jnp oracles in ref.py and jit'd wrappers in ops.py."""

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These are intentionally straight-line jnp implementations with no blocking,
+used by tests (``assert_allclose`` sweeps over shapes/dtypes) and as the
+portable fallback on backends without Pallas.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+
+_TWO32 = 4294967296.0
+
+
+def binary_matmul_ref(
+    x: jax.Array,
+    w_packed: jax.Array,
+    scale: jax.Array | None = None,
+    *,
+    compute_dtype=jnp.bfloat16,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """out = x @ unpack(w_packed) [* scale]."""
+    w = packing.unpack_bits(w_packed, dtype=compute_dtype)
+    out = jnp.dot(x.astype(compute_dtype), w, preferred_element_type=jnp.float32)
+    if scale is not None:
+        out = out * scale.astype(jnp.float32)[None, :]
+    return out.astype(out_dtype)
+
+
+def det_binarize_pack_ref(w: jax.Array) -> jax.Array:
+    """sign-binarize (Eq. 1) then bitpack."""
+    pm1 = jnp.where(w > 0, 1.0, -1.0).astype(jnp.float32)
+    return packing.pack_bits(pm1)
+
+
+def stoch_binarize_pack_ref(w: jax.Array, bits: jax.Array) -> jax.Array:
+    """Stochastic binarize (Eq. 2/3 with supplied uniform words) then bitpack."""
+    p = jnp.clip((w.astype(jnp.float32) + 1.0) * 0.5, 0.0, 1.0)
+    thresh = (p * _TWO32).astype(jnp.float32)
+    ones = (bits.astype(jnp.float32) < thresh)
+    pm1 = jnp.where(ones, 1.0, -1.0).astype(jnp.float32)
+    return packing.pack_bits(pm1)

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: fused (stochastic|deterministic) binarize + bitpack.
+
+FPGA stochastic BNNs use on-fabric LFSRs to draw the Bernoulli samples of
+Eq. (2); the TPU analogue is the on-chip PRNG (``pltpu.prng_random_bits``).
+The CPU Pallas interpreter has no lowering for the TPU PRNG primitives, so
+the kernel is written to take the uniform random words as an *operand*
+(``bits``): on a real TPU the caller can cheaply generate them with
+``pltpu.prng_random_bits`` (the ``use_tpu_prng`` flag swaps the body), while
+in interpret mode / tests they come from ``jax.random.bits``. The kernel body
+— threshold against hard_sigmoid(w) in fixed point, pack 32 lanes into one
+int32 word — is identical in both paths and is what tests validate.
+
+Layout: w     (K, N) f32/bf16 master weights
+        bits  (K, N) uint32 uniform random words (stochastic only)
+        out   (K // 32, N) int32 packed sign bits (+1 -> 1)
+
+The threshold is computed in uint32 fixed point: P(bit=1) = sigma(w) and
+``bits < sigma(w) * 2^32`` has exactly that probability for uniform words.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.packing import PACK
+
+_TWO32 = 4294967296.0  # 2 ** 32
+
+
+def _pack_block(ones: jax.Array, bk: int) -> jax.Array:
+    """(bk, bn) uint32 {0,1} -> (bk//32, bn) int32 packed words."""
+    bn = ones.shape[-1]
+    b = ones.reshape(bk // PACK, PACK, bn)
+    shifts = jnp.arange(PACK, dtype=jnp.uint32)[None, :, None]
+    words = jnp.sum(b << shifts, axis=1, dtype=jnp.uint32)
+    return words.astype(jnp.int32)
+
+
+def _stoch_kernel(w_ref, bits_ref, o_ref, *, bk: int):
+    w = w_ref[...].astype(jnp.float32)
+    p = jnp.clip((w + 1.0) * 0.5, 0.0, 1.0)            # Eq. (3)
+    thresh = (p * _TWO32).astype(jnp.float32)
+    u = bits_ref[...].astype(jnp.float32)               # uniform in [0, 2^32)
+    ones = (u < thresh).astype(jnp.uint32)              # P(one) = p  (Eq. 2)
+    o_ref[...] = _pack_block(ones, bk)
+
+
+def _stoch_kernel_tpu_prng(seed_ref, w_ref, o_ref, *, bk: int):
+    """Real-TPU variant: draws bits on chip. Not lowerable on CPU interpret."""
+    pltpu.prng_seed(seed_ref[0], pl.program_id(0), pl.program_id(1))
+    w = w_ref[...].astype(jnp.float32)
+    p = jnp.clip((w + 1.0) * 0.5, 0.0, 1.0)
+    thresh = (p * _TWO32).astype(jnp.float32)
+    raw = pltpu.prng_random_bits(w.shape)
+    u = raw.astype(jnp.uint32).astype(jnp.float32)
+    ones = (u < thresh).astype(jnp.uint32)
+    o_ref[...] = _pack_block(ones, bk)
+
+
+def _det_kernel(w_ref, o_ref, *, bk: int):
+    ones = (w_ref[...] > 0).astype(jnp.uint32)          # Eq. (1)
+    o_ref[...] = _pack_block(ones, bk)
+
+
+def binarize_pack_pallas(
+    w: jax.Array,
+    bits: jax.Array | None = None,
+    *,
+    stochastic: bool,
+    block_k: int = 256,
+    block_n: int = 256,
+    seed: jax.Array | None = None,
+    use_tpu_prng: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused binarize+pack. ``w`` is (K, N) with K % block_k == 0,
+    N % block_n == 0, block_k % 32 == 0 (ops.py pads arbitrary shapes)."""
+    kdim, n = w.shape
+    if kdim % block_k or n % block_n or block_k % PACK:
+        raise ValueError(f"bad blocks for shape {(kdim, n)}")
+    grid = (kdim // block_k, n // block_n)
+    w_spec = pl.BlockSpec((block_k, block_n), lambda i, j: (i, j))
+    o_spec = pl.BlockSpec((block_k // PACK, block_n), lambda i, j: (i, j))
+    out_shape = jax.ShapeDtypeStruct((kdim // PACK, n), jnp.int32)
+
+    if not stochastic:
+        return pl.pallas_call(
+            functools.partial(_det_kernel, bk=block_k),
+            grid=grid, in_specs=[w_spec], out_specs=o_spec,
+            out_shape=out_shape, interpret=interpret,
+        )(w)
+
+    if use_tpu_prng:
+        if seed is None:
+            raise ValueError("use_tpu_prng requires a seed scalar")
+        return pl.pallas_call(
+            functools.partial(_stoch_kernel_tpu_prng, bk=block_k),
+            grid=grid,
+            in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM), w_spec],
+            out_specs=o_spec,
+            out_shape=out_shape, interpret=interpret,
+        )(seed.reshape(1).astype(jnp.int32), w)
+
+    if bits is None:
+        raise ValueError("stochastic=True without use_tpu_prng requires bits")
+    bits_spec = pl.BlockSpec((block_k, block_n), lambda i, j: (i, j))
+    return pl.pallas_call(
+        functools.partial(_stoch_kernel, bk=block_k),
+        grid=grid, in_specs=[w_spec, bits_spec], out_specs=o_spec,
+        out_shape=out_shape, interpret=interpret,
+    )(w, bits)

@@ -1,0 +1,150 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape)`` returns the exact argument pytree the lowered
+step function takes for that (architecture x input-shape) cell:
+
+* train:   {"tokens": (B, S+1) int32}  — or, for stubbed-frontend archs,
+           {"tokens": (B, S, D) act-dtype embeddings, "labels": (B, S) int32}
+* prefill: (B, S) tokens / (B, S, D) embeddings
+* decode:  a populated decode cache for ``seq_len`` context + one new token.
+
+Also provides the state/batch PartitionSpec trees used by the launchers.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed.sharding import batch_axes, params_pspecs
+from repro.models import transformer as T
+
+
+def _token_spec(cfg: ModelConfig, batch: int, seq: int):
+    if cfg.frontend:
+        return jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                    cfg.activation_dtype)
+    return jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.frontend:
+            return {"tokens": _token_spec(cfg, b, s),
+                    "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        return {"tokens": jax.ShapeDtypeStruct((b, s + 1), jnp.int32)}
+    if shape.kind == "prefill":
+        return {"tokens": _token_spec(cfg, b, s)}
+    # decode: one new token against a seq_len cache
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, b, s))
+    return {"cache": cache, "tokens": _token_spec(cfg, b, 1)}
+
+
+# ---------------------------------------------------------------------------
+# PartitionSpecs
+# ---------------------------------------------------------------------------
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeSpec, mesh) -> Any:
+    dp = batch_axes(mesh)
+    tok = P(dp, None, None) if cfg.frontend else P(dp, None)
+    if shape.kind == "train":
+        if cfg.frontend:
+            return {"tokens": tok, "labels": P(dp, None)}
+        return {"tokens": tok}
+    if shape.kind == "prefill":
+        return {"tokens": tok}
+    return {"cache": cache_pspecs(cfg, shape, mesh), "tokens": tok}
+
+
+def cache_pspecs(cfg: ModelConfig, shape: ShapeSpec, mesh) -> dict:
+    """KV cache: batch over data, sequence over model (flash-decoding);
+    SSM state: batch over data, heads over model when divisible."""
+    dp = batch_axes(mesh)
+    b = shape.global_batch
+    n_model = mesh.shape["model"]
+    dpb = dp if b % _axis_size(mesh, dp) == 0 else None
+    specs: dict[str, Any] = {"pos": P(dpb)}
+
+    def kv_spec(ndim):
+        # (L, B, S, KV, hd) or hybrid (P, B, S, KV, hd)
+        return P(None, dpb, "model", None, None)
+
+    def ssm_spec(ndim):
+        heads_ok = cfg.ssm_heads % n_model == 0
+        m = "model" if heads_ok else None
+        if ndim == 5:    # (L, B, H, hp, N)
+            return P(None, dpb, m, None, None)
+        return P(None, None, dpb, m, None, None)  # hybrid (P, nm, B, H, hp, N)
+
+    def conv_spec(ndim):
+        if ndim == 4:    # (L, B, W-1, conv_dim)
+            return P(None, dpb, None, "model")
+        return P(None, None, dpb, None, "model")   # hybrid
+
+    if cfg.family == "ssm":
+        specs["ssm"] = ssm_spec(5)
+        specs["conv"] = conv_spec(4)
+    elif cfg.is_hybrid:
+        specs["k"] = kv_spec(5)
+        specs["v"] = kv_spec(5)
+        specs["ssm"] = ssm_spec(6)
+        specs["conv"] = conv_spec(5)
+    else:
+        specs["k"] = kv_spec(5)
+        specs["v"] = kv_spec(5)
+    return specs
+
+
+def sanitize_pspecs(shapes, pspecs, mesh):
+    """Drops mesh axes whose size does not divide the corresponding dim.
+
+    Keeps every divisible sharding; anything else becomes replicated on that
+    dim (XLA would otherwise reject explicit in/out shardings — e.g. the
+    mamba2 in_proj output dim 2*d_inner + 2*N + H = 3352, or batch=1 cells).
+    """
+
+    def fix(sds, spec):
+        if not isinstance(spec, P):
+            return spec
+        dims = getattr(sds, "shape", ())
+        new = []
+        for i, ax in enumerate(spec):
+            if ax is None or i >= len(dims):
+                new.append(None)
+                continue
+            size = _axis_size(mesh, ax)
+            new.append(ax if size and dims[i] % size == 0 else None)
+        return P(*new)
+
+    return jax.tree.map(fix, shapes, pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    out = 1
+    for a in axes:
+        out *= mesh.shape[a]
+    return max(out, 1)
+
+
+def state_pspecs(params_shape, mesh, fsdp: bool) -> dict:
+    """Train-state PartitionSpecs: params + matching optimizer slots."""
+    pspec = params_pspecs(params_shape, fsdp=fsdp, dp_axes=batch_axes(mesh))
+    return {
+        "params": pspec,
+        "opt": {"mu": pspec},
+        "step": P(),
+        "key": P(),
+    }
+
+
+def fsdp_threshold_hit(cfg: ModelConfig, threshold: float = 8e9) -> bool:
+    return cfg.param_count() > threshold

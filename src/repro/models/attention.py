@@ -1,0 +1,218 @@
+"""Grouped-query attention with RoPE, sliding windows, and KV caching.
+
+Covers the assigned families: GQA (all LM archs), MHA (musicgen kv==heads),
+sliding-window (h2o-danube-3), QKV bias (qwen2.5), plus the decode path used
+by ``serve_step`` (single new token against a cached context; the cache is
+sharded batch-over-data and sequence-over-model — flash-decoding style — so
+XLA partitions the softmax reduction across chips).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_linear, apply_rope
+
+NEG_INF = -1e30
+
+
+class AttnParams(NamedTuple):
+    w_qkv: jax.Array                 # (D, (H + 2*KV) * hd)
+    w_o: jax.Array                   # (H * hd, D)
+    b_qkv: Optional[jax.Array] = None
+
+
+def init_attn(key, cfg, init_fn) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "w_qkv": init_fn(k1, (cfg.d_model, cfg.q_dim + 2 * cfg.kv_dim)),
+        "w_o": init_fn(k2, (cfg.q_dim, cfg.d_model)),
+    }
+    if cfg.qkv_bias:
+        p["b_qkv"] = jnp.zeros((cfg.q_dim + 2 * cfg.kv_dim,), jnp.float32)
+    return p
+
+
+def _split_qkv(cfg, qkv):
+    q, k, v = jnp.split(qkv, [cfg.q_dim, cfg.q_dim + cfg.kv_dim], axis=-1)
+    b, s = q.shape[:2]
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def _repeat_kv(x: jax.Array, groups: int) -> jax.Array:
+    if groups == 1:
+        return x
+    b, s, kv, hd = x.shape
+    return jnp.repeat(x, groups, axis=2)
+
+
+def causal_mask(s_q: int, s_k: int, window: Optional[int], q_offset: int = 0):
+    """(s_q, s_k) boolean mask; True = attend. Supports sliding window."""
+    qi = jnp.arange(s_q)[:, None] + q_offset
+    ki = jnp.arange(s_k)[None, :]
+    m = ki <= qi
+    if window is not None:
+        m &= (qi - ki) < window
+    return m
+
+
+# Sequences at or above this length use the chunked online-softmax (flash)
+# path, which keeps attention memory O(S * chunk) instead of O(S^2).
+FLASH_THRESHOLD = 4096
+FLASH_CHUNK = 1024
+
+
+def flash_attention(q, k, v, *, window: Optional[int] = None,
+                    chunk_q: int = FLASH_CHUNK, chunk_k: int = FLASH_CHUNK):
+    """Causal chunked attention with online softmax (pure jnp).
+
+    q/k/v: (B, S, H, hd), k/v already GQA-expanded. Memory per step is one
+    (B, H, cq, ck) block; masked blocks are computed-and-discarded (the
+    waste is < 1% of a full model's FLOPs at 32k — see DESIGN/§Perf)."""
+    bsz, s, h, hd = q.shape
+    nq, nk = s // chunk_q, s // chunk_k
+    scale = hd ** -0.5
+    qc = jnp.moveaxis(q.reshape(bsz, nq, chunk_q, h, hd), 1, 0)
+    kc = jnp.moveaxis(k.reshape(bsz, nk, chunk_k, h, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(bsz, nk, chunk_k, h, hd), 1, 0)
+    qi = jnp.arange(chunk_q)
+    kj = jnp.arange(chunk_k)
+
+    def q_block(_, iq):
+        i, qb = iq                                  # qb: (B, cq, H, hd)
+
+        def k_block(carry, jk):
+            m, l, acc = carry
+            j, kb, vb = jk
+            logits = jnp.einsum("bqhd,bkhd->bhqk", qb, kb)
+            logits = logits.astype(jnp.float32) * scale
+            qpos = i * chunk_q + qi[:, None]
+            kpos = j * chunk_k + kj[None, :]
+            msk = kpos <= qpos
+            if window is not None:
+                msk &= (qpos - kpos) < window
+            logits = jnp.where(msk[None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m, logits.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l * alpha + p.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(qb.dtype), vb).astype(jnp.float32)
+            return (m_new, l_new, acc_new), ()
+
+        m0 = jnp.full((bsz, h, chunk_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((bsz, h, chunk_q), jnp.float32)
+        a0 = jnp.zeros((bsz, h, chunk_q, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            k_block, (m0, l0, a0), (jnp.arange(nk), kc, vc))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return (), jnp.moveaxis(out, 1, 2).astype(qb.dtype)  # (B, cq, H, hd)
+
+    _, ob = jax.lax.scan(q_block, (), (jnp.arange(nq), qc))
+    return jnp.moveaxis(ob, 0, 1).reshape(bsz, s, h, hd)
+
+
+def _sdpa(cfg, q, k, v, s: int):
+    """Dispatch: dense attention below FLASH_THRESHOLD, flash above."""
+    if s >= FLASH_THRESHOLD and s % FLASH_CHUNK == 0:
+        return flash_attention(q, k, v, window=cfg.sliding_window)
+    scale = cfg.head_dim ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    mask = causal_mask(s, s, cfg.sliding_window)
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def attention(cfg, params: dict, x: jax.Array, positions: jax.Array,
+              sh=None) -> jax.Array:
+    """Full (training / prefill) self-attention. x: (B, S, D)."""
+    qkv = apply_linear(params["w_qkv"], x, params.get("b_qkv"))
+    if sh is not None:
+        qkv = sh.act(qkv, "btq")
+    q, k, v = _split_qkv(cfg, qkv)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    groups = cfg.n_heads // cfg.n_kv_heads
+    k = _repeat_kv(k, groups)
+    v = _repeat_kv(v, groups)
+    if sh is not None:  # heads over "model" (padded when H % axis != 0)
+        q, k, v = (sh.act(t, "bthd") for t in (q, k, v))
+
+    out = _sdpa(cfg, q, k, v, x.shape[1])
+    out = out.reshape(x.shape[0], x.shape[1], cfg.q_dim)
+    if sh is not None:
+        out = sh.act(out, "btq")
+    return apply_linear(params["w_o"], out)
+
+
+def attention_with_cache_write(cfg, params, x, positions, sh=None):
+    """Prefill: same as :func:`attention` but also returns (k, v) to cache.
+
+    Returned k/v are pre-GQA-expansion (B, S, KV, hd), post-RoPE."""
+    qkv = apply_linear(params["w_qkv"], x, params.get("b_qkv"))
+    if sh is not None:
+        qkv = sh.act(qkv, "btq")
+    q, k, v = _split_qkv(cfg, qkv)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    groups = cfg.n_heads // cfg.n_kv_heads
+    ke = _repeat_kv(k, groups)
+    ve = _repeat_kv(v, groups)
+    out = _sdpa(cfg, q, ke, ve, x.shape[1])
+    out = out.reshape(x.shape[0], x.shape[1], cfg.q_dim)
+    return apply_linear(params["w_o"], out), k, v
+
+
+def decode_attention(cfg, params, x, k_cache, v_cache, pos, sh=None):
+    """One-token decode. x: (B, 1, D); caches: (B, S_cache, KV, hd);
+    pos: (B,) int32 current write position (tokens seen so far).
+
+    For sliding-window archs the cache length is the window and writes wrap
+    (ring buffer); masking is by *token age*, which is wrap-invariant.
+    Returns (out, k_cache, v_cache)."""
+    b, _, _ = x.shape
+    s_cache = k_cache.shape[1]
+    qkv = apply_linear(params["w_qkv"], x, params.get("b_qkv"))
+    q, k, v = _split_qkv(cfg, qkv)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+
+    write_idx = pos % s_cache if cfg.sliding_window else jnp.minimum(pos, s_cache - 1)
+    bidx = jnp.arange(b)
+    k_cache = k_cache.at[bidx, write_idx].set(k[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[bidx, write_idx].set(v[:, 0].astype(v_cache.dtype))
+
+    # Grouped attention WITHOUT materializing the GQA-expanded cache
+    # (a repeat would cost groups x the cache bytes — §Perf iteration 2):
+    # q: (B, KV, G, hd) against cache (B, S, KV, hd).
+    groups = cfg.n_heads // cfg.n_kv_heads
+    qg = q[:, 0].reshape(b, cfg.n_kv_heads, groups, cfg.head_dim)
+    scale = cfg.head_dim ** -0.5
+    logits = jnp.einsum("bngd,bsnd->bngs", qg,
+                        k_cache.astype(x.dtype)).astype(jnp.float32) * scale
+
+    slots = jnp.arange(s_cache)[None, :]                       # (1, S)
+    if cfg.sliding_window:
+        # slot holds token (pos - age); valid if age < min(window, pos+1)
+        age = (write_idx[:, None] - slots) % s_cache
+        valid = age < jnp.minimum(jnp.int32(cfg.sliding_window), pos[:, None] + 1)
+    else:
+        valid = slots <= pos[:, None]
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bngs,bsnd->bngd", probs, v_cache.astype(x.dtype))
+    out = out.reshape(b, 1, cfg.q_dim)
+    return apply_linear(params["w_o"], out), k_cache, v_cache
+
+
+def cache_length(cfg, seq_len: int) -> int:
+    """Static KV-cache length for an arch at a given context length."""
+    if cfg.sliding_window:
+        return min(cfg.sliding_window, seq_len)
+    return seq_len

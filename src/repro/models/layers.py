@@ -1,0 +1,153 @@
+"""Base layers: linear application (dense or bitpacked-binary), norms,
+embeddings, rotary position embeddings, initializers.
+
+Models are *binarization-agnostic*: ``train_step`` binarizes the master
+parameter tree (Alg. 1) before calling the forward pass, and the serving path
+may substitute :class:`PackedLinear` leaves (bitpacked binary weights +
+optional per-channel scale); ``apply_linear`` dispatches on the leaf type so
+the same model code serves both.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import PACK
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedLinear:
+    """Bitpacked binary weight: ``unpack(packed) * scale`` of shape (K, N)."""
+
+    packed: jax.Array               # (K // 32, N) int32
+    scale: jax.Array | None         # (N,) f32 or None
+    k: int                          # static original K
+
+    def tree_flatten(self):
+        return (self.packed, self.scale), (self.k,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        packed, scale = children
+        return cls(packed, scale, aux[0])
+
+    @property
+    def shape(self):
+        return (self.k, self.packed.shape[-1])
+
+    @property
+    def ndim(self):
+        return 2
+
+
+def apply_linear(w, x: jax.Array, bias: jax.Array | None = None) -> jax.Array:
+    """x @ w (+ bias), where w is a dense array or a PackedLinear."""
+    if isinstance(w, PackedLinear):
+        from repro.kernels import ops
+
+        out = ops.binary_matmul(x, w.packed, w.scale, out_dtype=jnp.float32)
+        out = out.astype(x.dtype)
+    else:
+        out = jnp.dot(x, w.astype(x.dtype))
+    if bias is not None:
+        out = out + bias.astype(out.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def he_normal(key, shape, dtype=jnp.float32, fan_in=None):
+    """He initialization (the paper's choice for FC/VGG nets)."""
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = (2.0 / max(fan_in, 1)) ** 0.5
+    return std * jax.random.normal(key, shape, dtype)
+
+
+def lm_init(key, shape, dtype=jnp.float32, fan_in=None):
+    """Scaled-normal init for transformer projections."""
+    fan_in = fan_in if fan_in is not None else shape[-2] if len(shape) >= 2 else shape[0]
+    std = fan_in ** -0.5
+    return std * jax.random.normal(key, shape, dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def batch_norm(x, scale, bias, mean, var, *, training: bool,
+               momentum: float = 0.9, eps: float = 1e-5, axes=(0,)):
+    """BatchNorm with running stats (the paper normalizes every layer output).
+
+    Returns (y, new_mean, new_var); in eval mode the stats pass through."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    if training:
+        mu = jnp.mean(x32, axis=axes)
+        va = jnp.var(x32, axis=axes)
+        new_mean = momentum * mean + (1.0 - momentum) * mu
+        new_var = momentum * var + (1.0 - momentum) * va
+    else:
+        mu, va = mean, var
+        new_mean, new_var = mean, var
+    shape = [1] * x.ndim
+    shape[-1] = x.shape[-1]
+    y = (x32 - mu.reshape(shape)) * jax.lax.rsqrt(va.reshape(shape) + eps)
+    y = y * scale.reshape(shape) + bias.reshape(shape)
+    return y.astype(dt), new_mean, new_var
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                      # (hd/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                      # (B, S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embedding
+# ---------------------------------------------------------------------------
+
+def embed_lookup(embedding: jax.Array, tokens: jax.Array, dtype) -> jax.Array:
+    return jnp.take(embedding, tokens, axis=0).astype(dtype)

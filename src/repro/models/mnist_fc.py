@@ -1,0 +1,57 @@
+"""The paper's permutation-invariant fully-connected MNIST network.
+
+Architecture per the paper's §III-A (and the BinaryConnect lineage it cites):
+784 -> hidden -> hidden -> hidden -> 10, batch-norm after every layer output,
+softmax + cross-entropy, He initialization, SGD momentum with the Eq.-(4)
+adaptive learning-rate decay (implemented in ``repro.optim``).
+
+``apply`` is binarization-agnostic; Alg. 1 binarizes the kernels upstream in
+``train_step``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_linear, batch_norm, he_normal
+
+DEFAULT_HIDDEN = (2048, 2048, 2048)
+N_CLASSES = 10
+IN_DIM = 784
+
+
+def init(key, hidden=DEFAULT_HIDDEN, in_dim: int = IN_DIM,
+         n_classes: int = N_CLASSES) -> dict:
+    dims = (in_dim,) + tuple(hidden) + (n_classes,)
+    params: dict[str, Any] = {"layers": []}
+    state: dict[str, Any] = {"layers": []}
+    keys = jax.random.split(key, len(dims) - 1)
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        params["layers"].append({
+            "kernel": he_normal(keys[i], (a, b)),
+            "bias": jnp.zeros((b,)),
+            "bn_scale": jnp.ones((b,)),
+            "bn_bias": jnp.zeros((b,)),
+        })
+        state["layers"].append({
+            "mean": jnp.zeros((b,)),
+            "var": jnp.ones((b,)),
+        })
+    return {"params": params, "state": state}
+
+
+def apply(params: dict, state: dict, x: jax.Array, *, training: bool):
+    """x: (B, 784) -> (logits (B, 10), new_state)."""
+    new_state = {"layers": []}
+    h = x
+    n = len(params["layers"])
+    for i, (lp, ls) in enumerate(zip(params["layers"], state["layers"])):
+        h = apply_linear(lp["kernel"], h, lp["bias"])
+        h, m, v = batch_norm(h, lp["bn_scale"], lp["bn_bias"],
+                             ls["mean"], ls["var"], training=training)
+        new_state["layers"].append({"mean": m, "var": v})
+        if i < n - 1:
+            h = jax.nn.relu(h)
+    return h, new_state

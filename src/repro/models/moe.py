@@ -1,0 +1,127 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-based dispatch.
+
+Dispatch is sort-based (argsort by expert id -> position-in-expert ->
+scatter into an (E, capacity, D) buffer), which keeps every shape static for
+pjit while doing only *active* FLOPs (E * C * D * F with E*C ~= tokens * k).
+Expert weight tensors are stacked (E, ...) so experts shard over the
+``model`` mesh axis (EP) when E % axis == 0, and the buffer's capacity dim
+shards over ``data`` — GSPMD inserts the token all-to-all at the dispatch
+boundary exactly like a hand-written EP exchange.
+
+Router stays full-precision (BNN convention); expert projections are
+binarized by the default policy.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import PackedLinear, apply_linear
+
+
+def _expert_matmul(w, xe, dtype):
+    """Batched-over-experts matmul: (E, C, a) x (E, a, b) -> (E, C, b),
+    where ``w`` is dense or a bitpacked PackedLinear (packed serving)."""
+    if isinstance(w, PackedLinear):
+        from repro.kernels import ops
+
+        if w.scale is None:
+            out = jax.vmap(lambda a, p: ops.binary_matmul(a, p))(xe, w.packed)
+        else:
+            out = jax.vmap(lambda a, p, s: ops.binary_matmul(a, p, s))(
+                xe, w.packed, w.scale)
+        return out.astype(dtype)
+    return jnp.einsum("eca,eab->ecb", xe, w.astype(dtype))
+
+
+def init_moe(key, cfg, init_fn) -> dict:
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    keys = jax.random.split(key, 4)
+    p = {"router": init_fn(keys[0], (d, e), fan_in=d)}
+    if cfg.mlp_type == "glu":
+        p["w_gate"] = init_fn(keys[1], (e, d, f), fan_in=d)
+        p["w_up"] = init_fn(keys[2], (e, d, f), fan_in=d)
+        p["w_down"] = init_fn(keys[3], (e, f, d), fan_in=f)
+    else:
+        p["wi"] = init_fn(keys[1], (e, d, f), fan_in=d)
+        p["wo"] = init_fn(keys[2], (e, f, d), fan_in=f)
+    return p
+
+
+def capacity(cfg, n_tokens: int) -> int:
+    c = int(n_tokens * cfg.experts_per_token * cfg.capacity_factor
+            / max(cfg.n_experts, 1))
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def moe_ffn(cfg, params: dict, x: jax.Array, sh=None):
+    """x: (B, S, D) -> (y, aux). aux carries the load-balancing loss."""
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.experts_per_token
+    e = cfg.n_experts
+    cap = capacity(cfg, t)
+    xt = x.reshape(t, d)
+
+    # --- routing (fp32 for numerics; router excluded from binarization) ---
+    logits = jnp.dot(xt.astype(jnp.float32), params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                      # (T, E)
+    topk_p, topk_e = jax.lax.top_k(probs, k)                     # (T, k)
+    topk_p = topk_p / jnp.clip(topk_p.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.zeros((e,), jnp.float32).at[topk_e.reshape(-1)].add(1.0) / (t * k)
+    lb_loss = e * jnp.sum(me * ce)
+
+    # --- dispatch: sort assignments by expert ---
+    e_flat = topk_e.reshape(-1)                                  # (T*k,)
+    w_flat = topk_p.reshape(-1).astype(x.dtype)
+    tok_flat = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+
+    order = jnp.argsort(e_flat, stable=True)
+    se, st, sw = e_flat[order], tok_flat[order], w_flat[order]
+    if sh is not None:  # keep assignment vectors data-sharded (EP exchange
+        se, st, sw = (sh.act(v, "a") for v in (se, st, sw))  # happens at the
+        # (E, cap) buffer boundary, not by replicating 6M-row gathers)
+    counts = jnp.zeros((e,), jnp.int32).at[e_flat].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(t * k, dtype=jnp.int32) - starts[se]
+    keep = pos < cap
+    pos_c = jnp.where(keep, pos, cap)                            # overflow slot
+
+    # (E, cap+1, D) buffer; the +1 row swallows dropped tokens
+    buf = jnp.zeros((e, cap + 1, d), x.dtype).at[se, pos_c].set(xt[st])
+    xe = buf[:, :cap]
+    if sh is not None:
+        xe = sh.act(xe, "ecd")
+
+    # --- expert FFN (batched over E; dense or bitpacked weights) ---
+    if "w_gate" in params:
+        g = _expert_matmul(params["w_gate"], xe, x.dtype)
+        u = _expert_matmul(params["w_up"], xe, x.dtype)
+        if sh is not None:
+            g, u = sh.act(g, "ecf"), sh.act(u, "ecf")
+        h = jax.nn.silu(g) * u
+        ye = _expert_matmul(params["w_down"], h, x.dtype)
+    else:
+        h = _expert_matmul(params["wi"], xe, x.dtype)
+        if sh is not None:
+            h = sh.act(h, "ecf")
+        h = jax.nn.gelu(h)
+        ye = _expert_matmul(params["wo"], h, x.dtype)
+    if sh is not None:
+        ye = sh.act(ye, "ecd")
+
+    # --- combine ---
+    y_assign = ye[se, jnp.minimum(pos_c, cap - 1)]               # (T*k, D)
+    if sh is not None:
+        y_assign = sh.act(y_assign, "ad")
+    y_assign = y_assign * (sw * keep.astype(x.dtype))[:, None]
+    y = jnp.zeros((t, d), x.dtype).at[st].add(y_assign)
+    if sh is not None:
+        # shard the scatter-add target on BOTH dims: GSPMD then emits a
+        # reduce-scatter instead of a full-buffer all-reduce for the combine
+        y = sh.act(y, "ad")
+    return y.reshape(b, s, d), {"lb_loss": lb_loss,
+                                "dropped_frac": 1.0 - jnp.mean(keep)}

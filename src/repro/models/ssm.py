@@ -1,0 +1,220 @@
+"""Mamba2 (SSD — state-space duality) mixer, chunked-scan training form and
+O(1)-state decode form.
+
+Follows the minimal SSD formulation of Dao & Gu (arXiv:2405.21060): the
+sequence is split into chunks; within a chunk the quadratic dual form runs
+(an attention-like einsum masked by the decay kernel), and a ``lax.scan``
+passes the (H, P, N) state across chunks. n_groups = 1 (B/C shared across
+heads). A depthwise conv precedes the SSM over the [x, B, C] channels.
+
+Binarization applies to in_proj / out_proj only; A_log, dt_bias, D, conv and
+the gated RMSNorm stay full precision (see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_linear, rms_norm
+
+
+def init_ssm(key, cfg, init_fn) -> dict:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * n
+    keys = jax.random.split(key, 4)
+    return {
+        "in_proj": init_fn(keys[0], (d, 2 * di + 2 * n + h), fan_in=d),
+        "out_proj": init_fn(keys[1], (di, d), fan_in=di),
+        "conv": 0.1 * jax.random.normal(keys[2], (cfg.ssm_conv_width, conv_dim)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)),
+        "dt_bias": jnp.zeros((h,)),
+        "D": jnp.ones((h,)),
+        "norm_scale": jnp.zeros((di,)),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    idx = [di, 2 * di, 2 * di + n, 2 * di + 2 * n]
+    z, x, b_mat, c_mat, dt = jnp.split(zxbcdt, idx, axis=-1)
+    return z, x, b_mat, c_mat, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv, xbc: (B, S, C), w: (W, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(width):
+        out = out + pad[:, i:i + xbc.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out).astype(xbc.dtype)
+
+
+def ssd_chunked(x, dt, a, b_mat, c_mat, chunk: int, sh=None):
+    """Chunked SSD scan.
+
+    x: (B, S, H, P); dt: (B, S, H) post-softplus; a: (H,) negative decay;
+    b_mat/c_mat: (B, S, N). Returns y: (B, S, H, P) and final state
+    (B, H, P, N)."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    nc = s // chunk
+    assert nc * chunk == s, f"seq {s} not divisible by chunk {chunk}"
+
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    bc = b_mat.reshape(bsz, nc, chunk, n)
+    cc = c_mat.reshape(bsz, nc, chunk, n)
+
+    da = dtc * a[None, None, None, :]                  # (B, nc, Q, H) log-decay
+    cum = jnp.cumsum(da, axis=2)                       # inclusive cumsum
+
+    # --- intra-chunk (dual/quadratic form) ---
+    # L[i, j] = exp(cum_i - cum_j) for i >= j else 0       (B, nc, H, Q, Q)
+    li = cum[..., :, None, :] - cum[..., None, :, :]       # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask the *exponent*: exp of masked (i<j) entries would overflow and
+    # poison the backward pass through jnp.where (grad-of-where trap)
+    li = jnp.where(mask[None, None, :, :, None], li, -1e30)
+    decay = jnp.exp(li)
+    if sh is not None:  # (B, nc, Q, Q, H): heads over "model" — the SSD
+        decay = sh.act(decay, "bcqqh")  # dual-form blocks dominate memory
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)             # (B,nc,Q,Q)
+    xdt = xc * dtc[..., None]                              # dt-weighted input
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp",
+                         cb.astype(jnp.float32), decay, xdt.astype(jnp.float32))
+
+    # --- chunk states ---
+    seg_end = cum[:, :, -1:, :]                            # (B,nc,1,H)
+    state_w = jnp.exp(seg_end - cum)                       # decay to chunk end
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn",
+                        bc.astype(jnp.float32), state_w.astype(jnp.float32),
+                        xdt.astype(jnp.float32))           # (B,nc,H,P,N)
+    if sh is not None:
+        states = sh.act(states, "bchpn")
+
+    # --- inter-chunk recurrence ---
+    chunk_decay = jnp.exp(seg_end[:, :, 0, :])             # (B,nc,H)
+
+    def step(h_prev, inp):
+        st, dec = inp                                      # (B,H,P,N), (B,H)
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    final_state, h_before = jax.lax.scan(
+        step,
+        init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_before = jnp.moveaxis(h_before, 0, 1)                # (B,nc,H,P,N)
+
+    # --- inter-chunk output: y_i += C_i . h_chunkstart * exp(cum_i) ---
+    y_inter = jnp.einsum("bcin,bcih,bchpn->bcihp",
+                         cc.astype(jnp.float32), jnp.exp(cum).astype(jnp.float32),
+                         h_before)
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y.astype(x.dtype), final_state
+
+
+def ssm_forward(cfg, params: dict, x: jax.Array, sh=None,
+                chunk: int = 128, return_state: bool = False):
+    """Full-sequence Mamba2 mixer. x: (B, S, D) -> (B, S, D)."""
+    bsz, s, d = x.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    p = cfg.ssm_head_dim
+
+    zxbcdt = apply_linear(params["in_proj"], x)
+    if sh is not None:
+        zxbcdt = sh.act(zxbcdt, "btn")
+    z, xi, b_mat, c_mat, dt = _split_proj(cfg, zxbcdt)
+
+    xbc_raw = jnp.concatenate([xi, b_mat, c_mat], axis=-1)
+    conv_tail = xbc_raw[:, s - (cfg.ssm_conv_width - 1):]  # pre-conv window
+    xbc = _causal_conv(xbc_raw, params["conv"])
+    xi, b_mat, c_mat = jnp.split(xbc, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xi.reshape(bsz, s, h, p)
+    if sh is not None:
+        xh = sh.act(xh, "bthd")   # ssm heads over "model" (padded if uneven)
+        dt = sh.act(dt, "bsh")
+
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+    y, state = ssd_chunked(xh, dt, a, b_mat, c_mat, chunk, sh)
+    if pad:
+        y = y[:, :s]
+
+    y = y + xh[:, :s] * params["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)  # gate
+    y = rms_norm(y, params["norm_scale"])
+    out = apply_linear(params["out_proj"], y)
+    if return_state:
+        return out, state, conv_tail
+    return out
+
+
+def ssm_decode_step(cfg, params: dict, x: jax.Array, ssm_state: jax.Array,
+                    conv_state: jax.Array):
+    """One-token decode. x: (B, 1, D); ssm_state: (B, H, P, N);
+    conv_state: (B, W-1, conv_dim). Returns (out, ssm_state, conv_state)."""
+    bsz = x.shape[0]
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    p = cfg.ssm_head_dim
+    w = cfg.ssm_conv_width
+
+    zxbcdt = apply_linear(params["in_proj"], x)[:, 0]      # (B, ...)
+    z, xi, b_mat, c_mat, dt = _split_proj(cfg, zxbcdt)
+
+    xbc_new = jnp.concatenate([xi, b_mat, c_mat], axis=-1)  # (B, conv_dim)
+    window = jnp.concatenate([conv_state, xbc_new[:, None]], axis=1)  # (B, W, C)
+    conv_w = params["conv"].astype(jnp.float32)
+    xbc = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), conv_w)
+    xbc = jax.nn.silu(xbc).astype(x.dtype)
+    new_conv_state = window[:, 1:]
+    xi, b_mat, c_mat = jnp.split(xbc, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))   # (B, H)
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))               # (H,)
+    da = jnp.exp(dt * a[None, :])                                   # (B, H)
+    xh = xi.reshape(bsz, h, p).astype(jnp.float32)
+    dbx = jnp.einsum("bh,bhp,bn->bhpn", dt, xh, b_mat.astype(jnp.float32))
+    new_state = ssm_state * da[..., None, None] + dbx
+    y = jnp.einsum("bn,bhpn->bhp", c_mat.astype(jnp.float32), new_state)
+    y = y + xh * params["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)[:, None, :]
+    y = rms_norm(y, params["norm_scale"])
+    return apply_linear(params["out_proj"], y), new_state, new_conv_state
+
+
+def ssd_reference(x, dt, a, b_mat, c_mat):
+    """O(S^2)-free naive per-step recurrence oracle for tests."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp
+        da = jnp.exp(dtt * a)                                # (B,H)
+        dbx = jnp.einsum("bh,bhp,bn->bhpn", dtt, xt, bt)
+        state = state * da[..., None, None] + dbx
+        y = jnp.einsum("bn,bhpn->bhp", ct, state)
+        return state, y
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(b_mat, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(c_mat, 1, 0).astype(jnp.float32))
+    state, ys = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 1), state

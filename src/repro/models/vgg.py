@@ -1,0 +1,95 @@
+"""VGG-16 for CIFAR-10 (the paper's CNN benchmark, §III-A).
+
+Standard VGG-16 configuration (Simonyan & Zisserman) adapted to 32x32
+CIFAR inputs: 13 conv layers in 5 blocks with 2x2 maxpool after each block,
+batch-norm after every layer (the paper normalizes every layer output), and
+a compact FC head (512 -> 512 -> 10), as is conventional for CIFAR-scale
+VGG. Convolutions route through ``lax.conv_general_dilated`` with NHWC/HWIO
+layouts; kernels are binarized by Alg. 1 upstream (first conv and the final
+classifier are excluded by the BNN-standard policy in configs/vgg16_cifar10).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_linear, batch_norm, he_normal
+
+# VGG-16: numbers are output channels, "M" is maxpool.
+VGG16_CFG = (64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+             512, 512, 512, "M", 512, 512, 512, "M")
+N_CLASSES = 10
+
+
+def init(key, width_mult: float = 1.0, in_channels: int = 3,
+         n_classes: int = N_CLASSES, fc_dim: int = 512) -> dict:
+    params: dict[str, Any] = {"conv": [], "fc": []}
+    state: dict[str, Any] = {"conv": [], "fc": []}
+    keys = iter(jax.random.split(key, 32))
+    c_in = in_channels
+    for v in VGG16_CFG:
+        if v == "M":
+            continue
+        c_out = max(8, int(v * width_mult))
+        fan_in = 3 * 3 * c_in
+        params["conv"].append({
+            "kernel": he_normal(next(keys), (3, 3, c_in, c_out), fan_in=fan_in),
+            "bias": jnp.zeros((c_out,)),
+            "bn_scale": jnp.ones((c_out,)),
+            "bn_bias": jnp.zeros((c_out,)),
+        })
+        state["conv"].append({"mean": jnp.zeros((c_out,)), "var": jnp.ones((c_out,))})
+        c_in = c_out
+    fc_d = max(8, int(fc_dim * width_mult))
+    dims = (c_in, fc_d, fc_d, n_classes)  # 1x1 spatial after 5 pools on 32x32
+    for a, b in zip(dims[:-1], dims[1:]):
+        params["fc"].append({
+            "kernel": he_normal(next(keys), (a, b)),
+            "bias": jnp.zeros((b,)),
+            "bn_scale": jnp.ones((b,)),
+            "bn_bias": jnp.zeros((b,)),
+        })
+        state["fc"].append({"mean": jnp.zeros((b,)), "var": jnp.ones((b,))})
+    return {"params": params, "state": state}
+
+
+def _maxpool2x2(x: jax.Array) -> jax.Array:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def _conv(x: jax.Array, kernel: jax.Array, bias: jax.Array) -> jax.Array:
+    out = jax.lax.conv_general_dilated(
+        x, kernel.astype(x.dtype), window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out + bias.astype(out.dtype)
+
+
+def apply(params: dict, state: dict, x: jax.Array, *, training: bool):
+    """x: (B, 32, 32, 3) NHWC -> (logits (B, 10), new_state)."""
+    new_state: dict[str, Any] = {"conv": [], "fc": []}
+    ci = 0
+    for v in VGG16_CFG:
+        if v == "M":
+            x = _maxpool2x2(x)
+            continue
+        lp, ls = params["conv"][ci], state["conv"][ci]
+        x = _conv(x, lp["kernel"], lp["bias"])
+        x, m, va = batch_norm(x, lp["bn_scale"], lp["bn_bias"],
+                              ls["mean"], ls["var"], training=training,
+                              axes=(0, 1, 2))
+        new_state["conv"].append({"mean": m, "var": va})
+        x = jax.nn.relu(x)
+        ci += 1
+    x = x.reshape(x.shape[0], -1)
+    n = len(params["fc"])
+    for i, (lp, ls) in enumerate(zip(params["fc"], state["fc"])):
+        x = apply_linear(lp["kernel"], x, lp["bias"])
+        x, m, va = batch_norm(x, lp["bn_scale"], lp["bn_bias"],
+                              ls["mean"], ls["var"], training=training)
+        new_state["fc"].append({"mean": m, "var": va})
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x, new_state

@@ -1,0 +1,63 @@
+"""1-bit gradient compression with error feedback (signSGD-EF).
+
+The beyond-paper, on-theme distributed-optimization trick: the paper
+binarizes *weights* to kill the FPGA's multiplier bottleneck; at pod scale
+the analogous bottleneck is the data-parallel gradient all-reduce, so we
+binarize the *gradients* crossing the interconnect. Each worker sends
+``sign(g + e)`` (1 bit/element, 16-32x less ICI traffic) plus one f32 scale
+(the mean |g + e| — unbiased magnitude), and keeps the quantization residual
+``e`` as error feedback so the compression error is re-injected next step
+(Karimireddy et al. 2019 — EF makes signSGD converge like SGD).
+
+In the SPMD program the "collective" is expressed by compressing before and
+decompressing after the (mean) all-reduce that pjit inserts for
+data-parallel gradients; the compressed representation is what crosses the
+ICI when the update runs under shard_map (see distributed tests). The
+transform itself is pure and backend-agnostic.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def compress(g: jax.Array, err: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """g, err -> (sign bits as ±1 int8, scale f32 scalar, new_err)."""
+    corrected = g.astype(jnp.float32) + err.astype(jnp.float32)
+    scale = jnp.mean(jnp.abs(corrected))
+    sign = jnp.where(corrected >= 0, jnp.int8(1), jnp.int8(-1))
+    decompressed = scale * sign.astype(jnp.float32)
+    new_err = corrected - decompressed
+    return sign, scale, new_err
+
+
+def decompress(sign: jax.Array, scale: jax.Array) -> jax.Array:
+    return scale * sign.astype(jnp.float32)
+
+
+def init_error(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_tree(grads, err_tree):
+    """Applies EF 1-bit compression leaf-wise.
+
+    Returns (compressed_grads_f32, new_err_tree). The compressed grads are
+    returned already decompressed to f32 (rank-preserving) so they drop into
+    any optimizer; the int8 + scalar pair is what a bandwidth-accounting
+    model charges to the interconnect (16x fewer bits than bf16)."""
+    signs_scales = jax.tree.map(compress, grads, err_tree)
+    is_t = lambda t: isinstance(t, tuple) and len(t) == 3
+    dec = jax.tree.map(lambda t: decompress(t[0], t[1]), signs_scales, is_leaf=is_t)
+    new_err = jax.tree.map(lambda t: t[2], signs_scales, is_leaf=is_t)
+    return dec, new_err
+
+
+def compressed_bytes(params) -> int:
+    """ICI bytes per step for the compressed gradients (1 bit/elt + scalar)."""
+    total = 0
+    for leaf in jax.tree.leaves(params):
+        total += (leaf.size + 7) // 8 + 4
+    return total

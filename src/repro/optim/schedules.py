@@ -1,0 +1,40 @@
+"""Learning-rate schedules, including the paper's Eq. (4) adaptive decay.
+
+Eq. (4):  eta[epoch] = eta[epoch-1] * 0.01 ** (epoch / 100)
+
+which in closed form is  eta[E] = eta[0] * 0.01 ** (sum_{e=1..E} e / 100)
+                               = eta[0] * 0.01 ** (E * (E + 1) / 200).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def paper_eq4(eta0: float, steps_per_epoch: int):
+    """The paper's adaptive decaying learning rate, evaluated per step."""
+
+    def schedule(step):
+        epoch = (step // max(steps_per_epoch, 1)).astype(jnp.float32)
+        exponent = epoch * (epoch + 1.0) / 200.0
+        return jnp.asarray(eta0, jnp.float32) * jnp.power(0.01, exponent)
+
+    return schedule
+
+
+def constant(lr: float):
+    def schedule(step):
+        del step
+        return jnp.asarray(lr, jnp.float32)
+
+    return schedule
+
+
+def cosine(lr: float, warmup: int, total: int, final_frac: float = 0.1):
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac * lr + (1 - final_frac) * lr * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+
+    return schedule

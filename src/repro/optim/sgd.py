@@ -1,0 +1,101 @@
+"""Optimizers, built from scratch (no optax): SGD+momentum (the paper's
+choice) and AdamW, both as pure (init, update) pairs over pytrees.
+
+The BinaryConnect weight clip (Alg. 1 step 4) is applied by the train step
+after the optimizer update, via ``core.binarize.clip_tree`` — keeping the
+optimizers generic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+    # update(grads, opt_state, params, step) -> (new_params, new_opt_state)
+
+
+def sgd_momentum(schedule, momentum: float = 0.9,
+                 weight_decay: float = 0.0,
+                 momentum_dtype=None) -> Optimizer:
+    """SGD with (heavy-ball) momentum + the paper's schedule.
+
+    ``momentum_dtype``: keep the momentum slot in a reduced dtype
+    (bf16 halves optimizer memory — the lever that fits Alg.-1 training of
+    314-398B models on a single 256-chip pod; see EXPERIMENTS §Perf).
+    Default None = same dtype as the (f32 master) params, paper-faithful."""
+
+    def init(params):
+        if momentum_dtype is None:
+            return {"mu": jax.tree.map(jnp.zeros_like, params)}
+        return {"mu": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, momentum_dtype), params)}
+
+    def update(grads, state, params, step):
+        lr = schedule(step)
+
+        def upd(g, m, p):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            m_new = momentum * m.astype(jnp.float32) + g
+            p_new = p.astype(jnp.float32) - lr * m_new
+            return p_new.astype(p.dtype), m_new.astype(m.dtype)
+
+        flat = jax.tree.map(upd, grads, state["mu"], params)
+        new_params = jax.tree.map(lambda t: t[0], flat,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"mu": new_mu}
+
+    return Optimizer(init, update)
+
+
+def adamw(schedule, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+
+    def update(grads, state, params, step):
+        lr = schedule(step)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - jnp.power(b1, t)
+        c2 = 1.0 - jnp.power(b2, t)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * g
+            v_new = b2 * v + (1 - b2) * jnp.square(g)
+            upd_dir = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+            p_new = p.astype(jnp.float32) - lr * (upd_dir + weight_decay * p.astype(jnp.float32))
+            return p_new.astype(p.dtype), m_new, v_new
+
+        flat = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        is_t = lambda t: isinstance(t, tuple)
+        return (jax.tree.map(lambda t: t[0], flat, is_leaf=is_t),
+                {"m": jax.tree.map(lambda t: t[1], flat, is_leaf=is_t),
+                 "v": jax.tree.map(lambda t: t[2], flat, is_leaf=is_t)})
+
+    return Optimizer(init, update)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    factor = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * factor).astype(g.dtype),
+                        grads), norm

@@ -1,0 +1,81 @@
+"""Request batcher: groups incoming generation requests into fixed-shape
+batches (continuous batching, slot-based) so the jitted decode step never
+re-specializes.
+
+Production framing: requests arrive asynchronously; the engine keeps a fixed
+number of *slots* (the compiled batch dimension). Finished slots are refilled
+from the queue each step; empty slots decode padding and are masked out of
+the returned streams. This is the standard continuous-batching scheme (vLLM
+et al.) restricted to a static shape, which is what pjit wants.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+from typing import Deque, Iterable, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new: int
+    generated: list[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new
+
+
+class SlotBatcher:
+    def __init__(self, n_slots: int, prompt_len: int, pad_id: int = 0):
+        self.n_slots = n_slots
+        self.prompt_len = prompt_len
+        self.pad_id = pad_id
+        self.queue: Deque[Request] = collections.deque()
+        self.slots: list[Optional[Request]] = [None] * n_slots
+        self._uid = itertools.count()
+        self.completed: list[Request] = []
+
+    def submit(self, prompt: np.ndarray, max_new: int) -> int:
+        uid = next(self._uid)
+        p = np.asarray(prompt, np.int32)[: self.prompt_len]
+        if p.shape[0] < self.prompt_len:  # left-pad to static shape
+            p = np.concatenate(
+                [np.full(self.prompt_len - p.shape[0], self.pad_id, np.int32), p])
+        self.queue.append(Request(uid, p, max_new))
+        return uid
+
+    def refill(self) -> list[int]:
+        """Fills free slots from the queue; returns indices that changed."""
+        changed = []
+        for i, r in enumerate(self.slots):
+            if r is not None and r.done:
+                self.completed.append(r)
+                self.slots[i] = None
+            if self.slots[i] is None and self.queue:
+                self.slots[i] = self.queue.popleft()
+                changed.append(i)
+        return changed
+
+    def active_mask(self) -> np.ndarray:
+        return np.array([r is not None and not r.done for r in self.slots])
+
+    def prompts(self) -> np.ndarray:
+        out = np.full((self.n_slots, self.prompt_len), self.pad_id, np.int32)
+        for i, r in enumerate(self.slots):
+            if r is not None:
+                out[i] = r.prompt
+        return out
+
+    def record(self, tokens: np.ndarray) -> None:
+        for i, r in enumerate(self.slots):
+            if r is not None and not r.done:
+                r.generated.append(int(tokens[i]))
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and all(r is None or r.done for r in self.slots)

@@ -1,0 +1,18 @@
+"""Loss functions: softmax cross-entropy (the paper's choice) for
+classification and next-token LM variants."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean cross-entropy. logits (..., C) f-any; labels (...) int."""
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))

@@ -1,0 +1,183 @@
+"""Train/serve steps implementing the paper's Algorithm 1.
+
+One step =
+  1. ``w_b <- binarize(w_{t-1})``            (Eq. 1 or 2, STE-wrapped)
+  2. forward + backward against ``w_b``      (gradients land on masters)
+  3. optimizer update of the master weights  (SGD+momentum per the paper)
+  4. ``w <- clip(w)``                        (masters stay in [-1, +1])
+
+The step builders return pure functions suitable for ``jax.jit`` /
+``pjit``; all randomness is derived from (state key, step) so steps are
+reproducible and checkpoint-resumable. Optional microbatching (gradient
+accumulation via ``lax.scan``) and 1-bit gradient compression with error
+feedback hook in between (2) and (3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import binarize
+from repro.core.binarize import BinarizeMode
+from repro.optim import compression
+from repro.optim.sgd import Optimizer, clip_by_global_norm
+from repro.train.losses import accuracy, softmax_xent
+
+
+def init_train_state(params, optimizer: Optimizer, seed: int = 0,
+                     model_state: Any = None, use_compression: bool = False):
+    state = {
+        "params": params,
+        "opt": optimizer.init(params),
+        "step": jnp.zeros((), jnp.int32),
+        "key": jax.random.key(seed),
+    }
+    if model_state is not None:
+        state["model_state"] = model_state
+    if use_compression:
+        state["err"] = compression.init_error(params)
+    return state
+
+
+def _split_microbatches(batch, n: int):
+    return jax.tree.map(lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]),
+                        batch)
+
+
+def make_train_step(
+    loss_fn: Callable,                   # loss_fn(params, batch [, model_state]) -> (loss, aux)
+    optimizer: Optimizer,
+    mode: BinarizeMode | str,
+    policy,
+    *,
+    microbatches: int = 1,
+    grad_clip: Optional[float] = None,
+    use_compression: bool = False,
+    has_model_state: bool = False,
+    donate: bool = True,
+    compute_dtype=None,
+):
+    """Builds the Alg.-1 train step. ``loss_fn`` must return
+    ``(loss, aux_dict)`` — when ``has_model_state``, aux_dict must contain
+    ``"model_state"`` (e.g. batch-norm running stats)."""
+    mode = BinarizeMode.parse(mode)
+
+    def step_fn(state, batch):
+        step_key = jax.random.fold_in(state["key"], state["step"])
+
+        def binarized_loss(params, mb):
+            w_b = binarize.binarize_tree(params, mode, policy, step_key)   # Alg.1 (1)
+            if compute_dtype is not None:
+                # mixed precision: f32 masters, bf16 compute — halves the
+                # materialized binarized-weight copies for 100B+ models
+                w_b = jax.tree.map(
+                    lambda x: x.astype(compute_dtype)
+                    if hasattr(x, "dtype") and x.dtype == jnp.float32 else x,
+                    w_b)
+            if has_model_state:
+                return loss_fn(w_b, mb, state["model_state"])
+            return loss_fn(w_b, mb)
+
+        grad_fn = jax.value_and_grad(binarized_loss, has_aux=True)
+
+        if microbatches > 1:
+            mbs = _split_microbatches(batch, microbatches)
+
+            def accum(gsum, mb):
+                (loss, aux), g = grad_fn(state["params"], mb)
+                return jax.tree.map(jnp.add, gsum, g), (loss, aux)
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+            gsum, (losses, auxs) = jax.lax.scan(accum, zeros, mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = jnp.mean(losses)
+            aux = jax.tree.map(lambda x: x[-1], auxs)  # last microbatch's aux
+        else:
+            (loss, aux), grads = grad_fn(state["params"], batch)    # Alg.1 (2)
+
+        metrics = {"loss": loss}
+        if grad_clip is not None:
+            grads, gnorm = clip_by_global_norm(grads, grad_clip)
+            metrics["grad_norm"] = gnorm
+
+        new_state = dict(state)
+        if use_compression:                                         # signSGD-EF
+            grads, new_state["err"] = compression.compress_tree(
+                grads, state["err"])
+
+        params, opt = optimizer.update(                              # Alg.1 (3)
+            grads, state["opt"], state["params"], state["step"])
+        if mode is not BinarizeMode.NONE:
+            params = binarize.clip_tree(params, policy)                     # Alg.1 (4)
+
+        new_state.update(params=params, opt=opt, step=state["step"] + 1)
+        if has_model_state:
+            new_state["model_state"] = aux.pop("model_state")
+        for k, v in aux.items():
+            if isinstance(v, jax.Array) and v.ndim == 0:
+                metrics[k] = v
+        return new_state, metrics
+
+    return step_fn
+
+
+# ---------------------------------------------------------------------------
+# Ready-made loss functions
+# ---------------------------------------------------------------------------
+
+def make_lm_loss(cfg, sh=None, lb_weight: float = 0.01):
+    """Next-token loss for the LM decoder stacks."""
+    from repro.models import transformer as T
+
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]
+        if tokens.dtype in (jnp.int32, jnp.int64):
+            inputs, labels = tokens[:, :-1], tokens[:, 1:]
+        else:  # stubbed frontend: embeds + explicit labels
+            inputs, labels = tokens, batch["labels"]
+        logits, aux = T.forward(cfg, params, inputs, sh)
+        xent = softmax_xent(logits, labels)
+        loss = xent + lb_weight * aux.get("lb_loss", 0.0)
+        return loss, {"xent": xent, "lb_loss": aux.get("lb_loss", jnp.float32(0))}
+
+    return loss_fn
+
+
+def make_classifier_loss(apply_fn):
+    """For the paper's FC/VGG models (batch-norm state threaded through)."""
+
+    def loss_fn(params, batch, model_state):
+        logits, new_state = apply_fn(params, model_state, batch["x"],
+                                     training=True)
+        loss = softmax_xent(logits, batch["y"])
+        return loss, {"model_state": new_state,
+                      "accuracy": accuracy(logits, batch["y"])}
+
+    return loss_fn
+
+
+def make_eval_fn(apply_fn):
+    @jax.jit
+    def eval_fn(params, model_state, x, y):
+        logits, _ = apply_fn(params, model_state, x, training=False)
+        return softmax_xent(logits, y), accuracy(logits, y)
+
+    return eval_fn
+
+
+def recalibrate_bn(apply_fn, params, model_state, batches, momentum_steps=None):
+    """Re-estimates batch-norm running stats under a *fixed* parameter tree.
+
+    Needed when evaluating a deterministically-binarized network whose
+    training ran with *stochastic* binarization: training-time BN statistics
+    were accumulated under per-step random sign draws and do not match the
+    fixed-sign inference network (standard recalibration for quantized
+    nets). ``batches`` is an iterable of input arrays."""
+    fwd = jax.jit(lambda p, s, x: apply_fn(p, s, x, training=True)[1])
+    for x in batches:
+        model_state = fwd(params, model_state, x)
+    return model_state

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests run single-device (the dry-run alone uses 512 placeholder devices,
+# in its own subprocess). Keep compilation deterministic and quiet.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

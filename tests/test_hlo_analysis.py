@@ -1,0 +1,126 @@
+"""HLO analyzer correctness: FLOPs vs analytic, trip-count attribution,
+collective accounting, shape parsing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hlo_analysis as H
+from repro.core import roofline as R
+
+
+class TestShapeParsing:
+    @pytest.mark.parametrize("s,expect", [
+        ("f32[8,16]{1,0}", 8 * 16 * 4),
+        ("bf16[128]", 128 * 2),
+        ("pred[4,4]", 16),
+        ("s32[]", 4),
+        ("(f32[2,2], bf16[4])", 16 + 8),
+        ("u8[10]{0}", 10),
+    ])
+    def test_shape_bytes(self, s, expect):
+        assert H.shape_bytes(s) == expect
+
+
+class TestFlops:
+    def test_unscanned_matmul_matches_analytic(self):
+        def f(a, b):
+            return (a @ b).sum()
+
+        c = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((256, 512), jnp.float32),
+            jax.ShapeDtypeStruct((512, 128), jnp.float32)).compile()
+        cost = H.analyze(c.as_text())
+        assert cost.flops == 2 * 256 * 512 * 128
+
+    def test_scan_trip_count_attribution(self):
+        """The raison d'etre: XLA cost_analysis counts scan bodies once;
+        the analyzer multiplies by the trip count."""
+        L, D = 8, 64
+
+        def f(ws, x):
+            def body(x, w):
+                return x @ w, ()
+            x, _ = jax.lax.scan(body, x, ws)
+            return x.sum()
+
+        c = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((L, D, D), jnp.float32),
+            jax.ShapeDtypeStruct((16, D), jnp.float32)).compile()
+        cost = H.analyze(c.as_text())
+        analytic = L * 2 * 16 * D * D
+        assert cost.flops == analytic, (cost.flops, analytic)
+        assert cost.unparsed_while == 0
+
+    def test_grad_of_scan(self):
+        L, D, B = 4, 32, 8
+
+        def f(ws, x):
+            def body(x, w):
+                return jax.nn.relu(x @ w), ()
+            y, _ = jax.lax.scan(body, x, ws)
+            return (y ** 2).sum()
+
+        c = jax.jit(jax.grad(f)).lower(
+            jax.ShapeDtypeStruct((L, D, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, D), jnp.float32)).compile()
+        cost = H.analyze(c.as_text())
+        # fwd 1 matmul + bwd 2 matmuls per layer
+        analytic = L * 3 * 2 * B * D * D
+        assert abs(cost.flops - analytic) / analytic < 0.01
+
+
+class TestCollectives:
+    def test_collective_bytes_counted(self):
+        import subprocess, sys, textwrap, json, os
+        # needs >1 device: run in a subprocess with forced host devices
+        code = textwrap.dedent("""
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+            import json, sys
+            sys.path.insert(0, "src")
+            import jax, jax.numpy as jnp
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.core import hlo_analysis as H
+            mesh = jax.make_mesh((4,), ("model",))
+            def f(a, b):
+                return (a @ b).sum()
+            with jax.set_mesh(mesh):
+                c = jax.jit(f, in_shardings=(
+                        NamedSharding(mesh, P(None, "model")),
+                        NamedSharding(mesh, P("model", None))),
+                    out_shardings=NamedSharding(mesh, P())).lower(
+                    jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                    jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+            cost = H.analyze(c.as_text())
+            print(json.dumps({"ar": cost.collective_bytes_by_kind.get(
+                "all-reduce", 0), "total": cost.collective_bytes}))
+        """)
+        out = subprocess.run([sys.executable, "-c", code], cwd="/root/repo",
+                             capture_output=True, text=True, timeout=300)
+        assert out.returncode == 0, out.stderr[-800:]
+        res = json.loads(out.stdout.strip().splitlines()[-1])
+        # contraction-sharded matmul => all-reduce of (64, 64) f32 partials
+        # (possibly fused with the sum reduce: accept either operand size)
+        assert res["total"] > 0
+        assert res["ar"] >= 4  # at least the scalar sum's all-reduce
+
+
+class TestRoofline:
+    def test_terms_and_dominance(self):
+        cost = H.HloCost(flops=197e12, bytes=819e9 * 2, collective_bytes=50e9)
+        t = R.from_hlo_cost(cost, chips=256)
+        assert t.compute_s == pytest.approx(1.0)
+        assert t.memory_s == pytest.approx(2.0)
+        assert t.collective_s == pytest.approx(1.0)
+        assert t.dominant == "memory"
+        assert t.bound_time_s == pytest.approx(2.0)
+
+    def test_useful_flops_fraction(self):
+        cost = H.HloCost(flops=6e12)
+        t = R.from_hlo_cost(cost, chips=1, model_flops=3e12)
+        assert t.useful_flops_fraction == pytest.approx(0.5)
+
+    def test_model_flops(self):
+        assert R.model_flops_train(1e9, 1e6) == 6e15
+        assert R.model_flops_infer(1e9, 1) == 2e9

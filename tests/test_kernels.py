@@ -1,0 +1,136 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs the jnp oracle."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import packing as P
+from repro.kernels import ops, ref
+from repro.kernels.binary_matmul import binary_matmul_pallas
+from repro.kernels.stoch_binarize import binarize_pack_pallas
+
+
+class TestPacking:
+    @hypothesis.given(st.integers(1, 8), st.integers(1, 33))
+    @hypothesis.settings(max_examples=20, deadline=None)
+    def test_roundtrip(self, k32, n):
+        key = jax.random.key(k32 * 100 + n)
+        pm1 = jnp.where(jax.random.bernoulli(key, 0.5, (k32 * 32, n)), 1., -1.)
+        np.testing.assert_array_equal(P.unpack_bits(P.pack_bits(pm1)), pm1)
+
+    def test_pad_to_pack(self):
+        w = jnp.ones((33, 4))
+        wp = P.pad_to_pack(w)
+        assert wp.shape == (64, 4)
+        np.testing.assert_array_equal(wp[33:], -jnp.ones((31, 4)))
+
+    def test_compression_ratio(self):
+        assert P.compression_ratio((1024, 1024), dtype_bytes=2) == 16.0
+        assert P.compression_ratio((1024, 1024), dtype_bytes=4) == 32.0
+
+
+# (M, K, N) sweeps: MXU-aligned, ragged, tiny.
+MATMUL_SHAPES = [
+    (128, 512, 128), (256, 1024, 384), (200, 512, 100), (8, 512, 128),
+    (128, 544, 128),  # K not multiple of block but multiple of 32
+]
+
+
+class TestBinaryMatmulKernel:
+    @pytest.mark.parametrize("m,k,n", MATMUL_SHAPES)
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_oracle(self, m, k, n, dtype):
+        kx, kw = jax.random.split(jax.random.key(m * k + n))
+        x = jax.random.normal(kx, (m, k), jnp.float32).astype(dtype)
+        wp = ops.binarize_and_pack(jax.random.normal(kw, (k, n)))
+        # ops picks compute dtype from the input (f32 in / f32 compute);
+        # compare the oracle under the same compute dtype
+        cd = jnp.float32 if dtype == jnp.float32 else jnp.bfloat16
+        got = ops.binary_matmul(x, wp, block_k=256)
+        want = ref.binary_matmul_ref(x, wp, compute_dtype=cd)
+        # f32 kernel accumulates per K-block: summation-order noise ~1e-4
+        tol = 1e-3 if dtype == jnp.float32 else 3e-2
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=tol, atol=tol)
+
+    def test_matches_dense_matmul(self):
+        x = jax.random.normal(jax.random.key(0), (256, 512))
+        w = jax.random.normal(jax.random.key(1), (512, 256))
+        wp = ops.binarize_and_pack(w)
+        dense = x @ jnp.where(w > 0, 1., -1.)
+        got = ops.binary_matmul(x, wp, block_k=256)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(dense, np.float32),
+                                   rtol=1e-4, atol=1e-3)
+
+    def test_scaled(self):
+        x = jax.random.normal(jax.random.key(2), (128, 512))
+        wp = ops.binarize_and_pack(jax.random.normal(jax.random.key(3), (512, 128)))
+        s = jax.random.uniform(jax.random.key(4), (128,), minval=0.5, maxval=2.0)
+        got = ops.binary_matmul(x, wp, s, block_k=256)
+        want = ref.binary_matmul_ref(x, wp, s, compute_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-3)
+
+    def test_batched_leading_dims(self):
+        x = jax.random.normal(jax.random.key(5), (4, 32, 512))
+        wp = ops.binarize_and_pack(jax.random.normal(jax.random.key(6), (512, 64)))
+        got = ops.binary_matmul(x, wp)
+        assert got.shape == (4, 32, 64)
+        want = ref.binary_matmul_ref(
+            x.reshape(-1, 512), wp,
+            compute_dtype=jnp.float32).reshape(4, 32, 64)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-3)
+
+    def test_block_spec_direct(self):
+        """Direct pallas_call with exact blocks (no padding path)."""
+        x = jax.random.normal(jax.random.key(7), (256, 1024))
+        wp = ops.binarize_and_pack(jax.random.normal(jax.random.key(8), (1024, 256)))
+        got = binary_matmul_pallas(x, wp, block_m=128, block_n=128,
+                                   block_k=256, interpret=True)
+        want = ref.binary_matmul_ref(x, wp)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=3e-2, atol=3e-2)
+
+
+class TestBinarizePackKernel:
+    @pytest.mark.parametrize("k,n", [(256, 256), (512, 384), (300, 100)])
+    def test_det_matches_oracle(self, k, n):
+        w = jax.random.normal(jax.random.key(k + n), (k, n))
+        got = ops.binarize_and_pack(w, stochastic=False)
+        want = ref.det_binarize_pack_ref(P.pad_to_pack(w))[:, :n]
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_stoch_matches_oracle_same_bits(self):
+        w = jax.random.normal(jax.random.key(0), (512, 256))
+        key = jax.random.key(42)
+        got = ops.binarize_and_pack(w, key, stochastic=True)
+        bits = jax.random.bits(key, (512, 256), jnp.uint32)
+        want = ref.stoch_binarize_pack_ref(w, bits)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_stoch_distribution(self):
+        w = jnp.full((512, 512), 0.5)  # P(+1) = 0.75
+        packed = ops.binarize_and_pack(w, jax.random.key(1), stochastic=True)
+        frac = float((P.unpack_bits(packed) > 0).mean())
+        assert abs(frac - 0.75) < 0.01
+
+    def test_det_pallas_direct(self):
+        w = jax.random.normal(jax.random.key(2), (512, 512))
+        got = binarize_pack_pallas(w, stochastic=False, interpret=True)
+        want = ref.det_binarize_pack_ref(w)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_roundtrip_through_matmul(self):
+        """Pack with the kernel, multiply with the kernel: end-to-end."""
+        w = jax.random.normal(jax.random.key(3), (512, 128))
+        x = jax.random.normal(jax.random.key(4), (64, 512))
+        wp = ops.binarize_and_pack(w)
+        got = ops.binary_matmul(x, wp, block_k=256)
+        want = x @ jnp.where(w > 0, 1., -1.)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(want, np.float32),
+                                   rtol=1e-4, atol=1e-3)

@@ -1,0 +1,210 @@
+"""Model correctness: per-arch smoke tests + component oracles."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base as cb
+from repro.models import attention as A
+from repro.models import ssm as S
+from repro.models import transformer as T
+
+LM_ARCHS = [a for a in cb.ARCH_IDS if a not in ("mnist_fc", "vgg16_cifar10")]
+
+
+def _toks(cfg, b, s, key=1):
+    if cfg.frontend:
+        return (jax.random.normal(jax.random.key(key), (b, s, cfg.d_model))
+                * 0.02).astype(jnp.float32)
+    return jax.random.randint(jax.random.key(key), (b, s), 0, cfg.vocab_size)
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+class TestArchSmoke:
+    """Reduced-config smoke: one forward + one train step, shapes + no NaNs."""
+
+    def test_forward_shapes_no_nan(self, arch):
+        cfg = cb.get_config(arch, smoke=True)
+        params = T.init_lm(cfg, jax.random.key(0))
+        b, s = 2, 32
+        logits, aux = T.forward(cfg, params, _toks(cfg, b, s))
+        assert logits.shape == (b, s, cfg.vocab_size)
+        assert not np.isnan(np.asarray(logits, np.float32)).any()
+
+    def test_train_step_no_nan(self, arch):
+        from repro.core.policy import DEFAULT_POLICY
+        from repro.optim import schedules
+        from repro.optim.sgd import sgd_momentum
+        from repro.train import steps as ST
+
+        cfg = cb.get_config(arch, smoke=True)
+        params = T.init_lm(cfg, jax.random.key(0))
+        opt = sgd_momentum(schedules.constant(1e-2))
+        step = ST.make_train_step(ST.make_lm_loss(cfg), opt, "det",
+                                  DEFAULT_POLICY)
+        state = ST.init_train_state(params, opt)
+        if cfg.frontend:
+            batch = {"tokens": _toks(cfg, 2, 16),
+                     "labels": jax.random.randint(jax.random.key(3), (2, 16),
+                                                  0, cfg.vocab_size)}
+        else:
+            batch = {"tokens": _toks(cfg, 2, 17)}
+        state, metrics = jax.jit(step)(state, batch)
+        assert np.isfinite(float(metrics["loss"]))
+        assert int(state["step"]) == 1
+        # masters stayed clipped (Alg. 1 step 4)
+        from repro.core.binarize import _path_str
+        for p, leaf in jax.tree_util.tree_leaves_with_path(state["params"]):
+            from repro.core.policy import DEFAULT_POLICY as POL
+            if POL.selects(_path_str(p)):
+                assert float(jnp.abs(leaf).max()) <= 1.0 + 1e-6
+
+    def test_prefill_decode_consistency(self, arch):
+        cfg = cb.get_config(arch, smoke=True)
+        params = T.init_lm(cfg, jax.random.key(0))
+        b, s = 2, 32
+        toks = _toks(cfg, b, s)
+        logits, _ = T.forward(cfg, params, toks)
+        lp, cache = T.prefill(cfg, params, toks[:, : s - 1], max_len=s)
+        np.testing.assert_allclose(
+            np.asarray(lp, np.float32),
+            np.asarray(logits[:, s - 2], np.float32), rtol=5e-2, atol=5e-3)
+        ld, cache = T.decode_step(cfg, params, cache, toks[:, s - 1: s])
+        np.testing.assert_allclose(
+            np.asarray(ld, np.float32),
+            np.asarray(logits[:, s - 1], np.float32), rtol=5e-2, atol=5e-3)
+
+
+class TestAttention:
+    def test_gqa_equals_mha_when_kv_equals_heads(self):
+        cfg = cb.get_config("musicgen_large", smoke=True)  # kv == heads
+        assert cfg.n_kv_heads == cfg.n_heads
+
+    def test_flash_matches_dense(self):
+        b, s, h, hd = 2, 512, 4, 32
+        q, k, v = (jax.random.normal(kk, (b, s, h, hd))
+                   for kk in jax.random.split(jax.random.key(0), 3))
+        fl = A.flash_attention(q, k, v, window=None, chunk_q=128, chunk_k=128)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) * hd ** -0.5
+        logits = jnp.where(A.causal_mask(s, s, None)[None, None],
+                           logits, A.NEG_INF)
+        dense = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(logits, -1), v)
+        np.testing.assert_allclose(np.asarray(fl), np.asarray(dense),
+                                   atol=1e-4)
+
+    def test_flash_matches_dense_sliding_window(self):
+        b, s, h, hd = 1, 256, 2, 16
+        q, k, v = (jax.random.normal(kk, (b, s, h, hd))
+                   for kk in jax.random.split(jax.random.key(1), 3))
+        fl = A.flash_attention(q, k, v, window=64, chunk_q=64, chunk_k=64)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) * hd ** -0.5
+        logits = jnp.where(A.causal_mask(s, s, 64)[None, None],
+                           logits, A.NEG_INF)
+        dense = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(logits, -1), v)
+        np.testing.assert_allclose(np.asarray(fl), np.asarray(dense),
+                                   atol=1e-4)
+
+    def test_swa_ring_decode_long(self):
+        cfg = dataclasses.replace(cb.get_config("h2o_danube_3_4b", smoke=True),
+                                  sliding_window=16)
+        params = T.init_lm(cfg, jax.random.key(0))
+        toks = jax.random.randint(jax.random.key(1), (1, 48), 0, cfg.vocab_size)
+        logits, _ = T.forward(cfg, params, toks)
+        lp, cache = T.prefill(cfg, params, toks[:, :24], max_len=48)
+        errs = [float(np.abs(np.asarray(lp) - np.asarray(logits[:, 23])).max())]
+        for t in range(24, 48):
+            ld, cache = T.decode_step(cfg, params, cache, toks[:, t: t + 1])
+            errs.append(float(
+                np.abs(np.asarray(ld) - np.asarray(logits[:, t])).max()))
+        assert max(errs) < 5e-4, errs
+
+    def test_cache_length(self):
+        cfg = cb.get_config("h2o_danube_3_4b")
+        assert A.cache_length(cfg, 524288) == 4096  # ring buffer = window
+        cfg2 = cb.get_config("qwen2_5_32b")
+        assert A.cache_length(cfg2, 32768) == 32768
+
+
+class TestSSM:
+    def test_ssd_chunked_matches_recurrence(self):
+        b, s, h, p, n = 2, 64, 3, 8, 16
+        ks = jax.random.split(jax.random.key(0), 5)
+        x = jax.random.normal(ks[0], (b, s, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+        a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+        bm = jax.random.normal(ks[3], (b, s, n)) * 0.3
+        cm = jax.random.normal(ks[4], (b, s, n)) * 0.3
+        y_ref, st_ref = S.ssd_reference(x, dt, a, bm, cm)
+        for chunk in (8, 32, 64):
+            y, stf = S.ssd_chunked(x, dt, a, bm, cm, chunk)
+            np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                       rtol=1e-3, atol=1e-4)
+            np.testing.assert_allclose(np.asarray(stf), np.asarray(st_ref),
+                                       rtol=1e-3, atol=1e-4)
+
+    def test_decode_step_matches_forward(self):
+        cfg = cb.get_config("mamba2_130m", smoke=True)
+        params = T.init_lm(cfg, jax.random.key(0))
+        toks = jax.random.randint(jax.random.key(1), (1, 33), 0, cfg.vocab_size)
+        logits, _ = T.forward(cfg, params, toks)
+        lp, cache = T.prefill(cfg, params, toks[:, :16], max_len=33)
+        for t in range(16, 33):
+            ld, cache = T.decode_step(cfg, params, cache, toks[:, t: t + 1])
+            np.testing.assert_allclose(
+                np.asarray(ld, np.float32),
+                np.asarray(logits[:, t], np.float32), rtol=5e-2, atol=5e-3)
+
+
+class TestMoE:
+    def test_routing_mass_conservation(self):
+        """With ample capacity, combine weights sum to 1 per token."""
+        from repro.models import moe as MOE
+
+        cfg = cb.get_config("moonshot_v1_16b_a3b", smoke=True)
+        params = MOE.init_moe(jax.random.key(0), cfg,
+                              lambda k, s, fan_in=None: 0.05 * jax.random.normal(k, s))
+        x = jax.random.normal(jax.random.key(1), (2, 16, cfg.d_model))
+        y, aux = MOE.moe_ffn(cfg, params, x)
+        assert y.shape == x.shape
+        assert float(aux["dropped_frac"]) == 0.0
+        assert np.isfinite(float(aux["lb_loss"]))
+
+    def test_capacity_drops(self):
+        from repro.models import moe as MOE
+
+        cfg = dataclasses.replace(cb.get_config("moonshot_v1_16b_a3b", smoke=True),
+                                  capacity_factor=0.05)
+        params = MOE.init_moe(jax.random.key(0), cfg,
+                              lambda k, s, fan_in=None: 0.05 * jax.random.normal(k, s))
+        x = jax.random.normal(jax.random.key(1), (4, 64, cfg.d_model))
+        _, aux = MOE.moe_ffn(cfg, params, x)
+        assert float(aux["dropped_frac"]) > 0.0
+
+    def test_moe_flops_are_active_only(self):
+        """The (E, C, ...) buffer bounds compute at tokens*topk, not E."""
+        from repro.models import moe as MOE
+
+        cfg = cb.get_config("moonshot_v1_16b_a3b", smoke=True)
+        cap = MOE.capacity(cfg, 1024)
+        assert cap * cfg.n_experts <= int(
+            1024 * cfg.experts_per_token * cfg.capacity_factor) + 8 * cfg.n_experts
+
+
+class TestParamCount:
+    @pytest.mark.parametrize("arch,approx_b", [
+        ("starcoder2_3b", 3.0), ("qwen2_5_32b", 32.5), ("deepseek_coder_33b", 33.0),
+        ("grok_1_314b", 314.0), ("mamba2_130m", 0.13), ("internvl2_76b", 76.0),
+    ])
+    def test_full_config_param_count(self, arch, approx_b):
+        n = cb.get_config(arch).param_count()
+        assert abs(n / 1e9 - approx_b) / approx_b < 0.35, n / 1e9
+
+    @pytest.mark.parametrize("arch", LM_ARCHS)
+    def test_param_count_matches_init_on_smoke(self, arch):
+        cfg = cb.get_config(arch, smoke=True)
+        params = T.init_lm(cfg, jax.random.key(0))
+        actual = sum(x.size for x in jax.tree.leaves(params))
+        predicted = cfg.param_count()
+        assert abs(actual - predicted) / actual < 0.05, (actual, predicted)

@@ -1,0 +1,195 @@
+"""Training-substrate tests: Alg. 1 end-to-end learning, optimizers, the
+paper's Eq.-4 schedule, gradient compression, microbatching."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.policy import BinarizePolicy, NONE_POLICY
+from repro.data import synthetic as syn
+from repro.models import mnist_fc
+from repro.optim import compression, schedules
+from repro.optim.sgd import adamw, clip_by_global_norm, global_norm, sgd_momentum
+from repro.train import steps as ST
+
+# BNN convention: first and last (classifier) layers stay full precision.
+POLICY = BinarizePolicy(include=(r".*kernel$",),
+                        exclude=(r"layers/0/kernel", r"layers/2/kernel"))
+
+
+def _setup(mode, hidden=(64, 64), batch=64, use_compression=False,
+           microbatches=1):
+    tree = mnist_fc.init(jax.random.key(0), hidden=hidden)
+    opt = sgd_momentum(schedules.constant(0.05), momentum=0.9)
+    loss_fn = ST.make_classifier_loss(mnist_fc.apply)
+    step = ST.make_train_step(loss_fn, opt, mode,
+                              POLICY if mode != "none" else NONE_POLICY,
+                              has_model_state=True,
+                              use_compression=use_compression,
+                              microbatches=microbatches)
+    state = ST.init_train_state(tree["params"], opt, model_state=tree["state"],
+                                use_compression=use_compression)
+    spec = syn.SyntheticSpec("mnist", n_train=6000, batch_size=batch)
+    return jax.jit(step), state, spec
+
+
+@pytest.mark.parametrize("mode", ["none", "det", "stoch"])
+def test_learns_synthetic_mnist(mode):
+    """The paper's core claim at unit scale: binarized (det & stoch) nets
+    train to high accuracy, closely tracking the unregularized net."""
+    step, state, spec = _setup(mode)
+    for i in range(150):
+        x, y = syn.train_batch(spec, i)
+        state, metrics = step(state, {"x": x.reshape(x.shape[0], -1), "y": y})
+    from repro.train.steps import make_eval_fn
+    from repro.core import binarize as B
+
+    eval_fn = make_eval_fn(mnist_fc.apply)
+    params = state["params"]
+    model_state = state["model_state"]
+    if mode != "none":  # inference runs on binarized weights (Alg. 1)
+        params = B.binarize_tree(params, "det", POLICY)
+    if mode == "stoch":  # BN stats were accumulated under random sign draws
+        cal = [syn.train_batch(spec, 10_000 + j)[0].reshape(-1, 784)
+               for j in range(20)]
+        model_state = ST.recalibrate_bn(mnist_fc.apply, params, model_state, cal)
+    x, y = syn.eval_batch(spec)
+    _, acc = eval_fn(params, model_state, x.reshape(x.shape[0], -1), y)
+    assert float(acc) > 0.9, f"{mode}: accuracy {float(acc)}"
+
+
+def test_masters_clipped_and_binary_values_used():
+    step, state, spec = _setup("det")
+    x, y = syn.train_batch(spec, 0)
+    state, _ = step(state, {"x": x.reshape(x.shape[0], -1), "y": y})
+    w = state["params"]["layers"][1]["kernel"]
+    assert float(jnp.abs(w).max()) <= 1.0  # Alg. 1 step 4
+
+
+def test_eq4_schedule_closed_form():
+    sched = schedules.paper_eq4(1e-3, steps_per_epoch=10)
+    # eta[E] = eta0 * 0.01 ** (E(E+1)/200)
+    for epoch in (0, 1, 5, 20):
+        got = float(sched(jnp.asarray(epoch * 10, jnp.int32)))
+        want = 1e-3 * 0.01 ** (epoch * (epoch + 1) / 200)
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_eq4_monotone_decay():
+    sched = schedules.paper_eq4(1e-3, steps_per_epoch=5)
+    vals = [float(sched(jnp.asarray(s, jnp.int32))) for s in range(0, 100, 5)]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))
+    assert vals[0] == pytest.approx(1e-3)
+
+
+def test_microbatch_equals_full_batch():
+    """Gradient accumulation must reproduce the large-batch trajectory.
+
+    Uses an LM model: per-token normalization makes the loss mean-decomposable
+    across microbatches. (BatchNorm models genuinely differ under
+    accumulation — per-microbatch statistics — so the FC net is not a valid
+    oracle here.)"""
+    from repro.configs import base as cb
+    from repro.core.policy import DEFAULT_POLICY
+    from repro.models import transformer as T
+
+    cfg = cb.get_config("starcoder2_3b", smoke=True)
+    params = T.init_lm(cfg, jax.random.key(0))
+    opt = sgd_momentum(schedules.constant(0.05), momentum=0.9)
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (8, 33), 0,
+                                          cfg.vocab_size)}
+
+    outs = []
+    for mb in (1, 4):
+        step = jax.jit(ST.make_train_step(ST.make_lm_loss(cfg), opt, "det",
+                                          DEFAULT_POLICY, microbatches=mb))
+        state = ST.init_train_state(jax.tree.map(jnp.copy, params), opt)
+        s, _ = step(state, batch)
+        outs.append(s["params"])
+    for a, b in zip(jax.tree.leaves(outs[0]), jax.tree.leaves(outs[1])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-4, atol=2e-5)
+
+
+class TestCompression:
+    def test_error_feedback_identity(self):
+        """decompressed + error == corrected gradient (lossless bookkeeping)."""
+        g = jax.random.normal(jax.random.key(0), (256,))
+        e = jax.random.normal(jax.random.key(1), (256,)) * 0.1
+        sign, scale, new_err = compression.compress(g, e)
+        recon = compression.decompress(sign, scale)
+        np.testing.assert_allclose(np.asarray(recon + new_err),
+                                   np.asarray(g + e), rtol=1e-5, atol=1e-6)
+
+    def test_sign_bits(self):
+        g = jnp.array([1.0, -2.0, 0.0, 3.0])
+        sign, scale, _ = compression.compress(g, jnp.zeros(4))
+        np.testing.assert_array_equal(sign, jnp.array([1, -1, 1, 1], jnp.int8))
+
+    def test_compressed_bytes_16x(self):
+        params = {"w": jnp.zeros((1024, 1024))}
+        cb = compression.compressed_bytes(params)
+        dense = 1024 * 1024 * 2  # bf16
+        assert dense / cb > 15.0
+
+    def test_training_with_compression_learns(self):
+        step, state, spec = _setup("det", use_compression=True)
+        losses = []
+        for i in range(80):
+            x, y = syn.train_batch(spec, i)
+            state, m = step(state, {"x": x.reshape(x.shape[0], -1), "y": y})
+            losses.append(float(m["loss"]))
+        assert np.mean(losses[-10:]) < 0.5 * np.mean(losses[:10])
+
+
+class TestOptimizers:
+    def test_sgd_momentum_matches_manual(self):
+        opt = sgd_momentum(schedules.constant(0.1), momentum=0.9)
+        p = {"w": jnp.array([1.0, -1.0])}
+        s = opt.init(p)
+        g = {"w": jnp.array([0.5, 0.5])}
+        p1, s1 = opt.update(g, s, p, jnp.asarray(0, jnp.int32))
+        np.testing.assert_allclose(p1["w"], jnp.array([0.95, -1.05]))
+        p2, _ = opt.update(g, s1, p1, jnp.asarray(1, jnp.int32))
+        # mu = 0.9*0.5 + 0.5 = 0.95; p = 0.95 - 0.1*0.95
+        np.testing.assert_allclose(p2["w"], jnp.array([0.855, -1.145]),
+                                   rtol=1e-6)
+
+    def test_adamw_step_direction(self):
+        opt = adamw(schedules.constant(1e-2))
+        p = {"w": jnp.ones((8,))}
+        s = opt.init(p)
+        g = {"w": jnp.ones((8,))}
+        p1, _ = opt.update(g, s, p, jnp.asarray(0, jnp.int32))
+        assert (np.asarray(p1["w"]) < 1.0).all()
+
+    def test_global_norm_clip(self):
+        g = {"a": jnp.full((4,), 3.0), "b": jnp.full((4,), 4.0)}
+        clipped, norm = clip_by_global_norm(g, 1.0)
+        np.testing.assert_allclose(float(norm), 10.0)
+        np.testing.assert_allclose(float(global_norm(clipped)), 1.0,
+                                   rtol=1e-4)
+
+
+def test_bf16_momentum_learns():
+    """Quantized optimizer slot (beyond-paper lever for 300B+ single-pod
+    Alg.-1 training): bf16 momentum must not break convergence."""
+    import jax.numpy as jnp
+
+    tree = mnist_fc.init(jax.random.key(0), hidden=(64, 64))
+    opt = sgd_momentum(schedules.constant(0.05), momentum=0.9,
+                       momentum_dtype=jnp.bfloat16)
+    step = jax.jit(ST.make_train_step(
+        ST.make_classifier_loss(mnist_fc.apply), opt, "det", POLICY,
+        has_model_state=True))
+    state = ST.init_train_state(tree["params"], opt,
+                                model_state=tree["state"])
+    assert jax.tree.leaves(state["opt"]["mu"])[0].dtype == jnp.bfloat16
+    spec = syn.SyntheticSpec("mnist", n_train=6000, batch_size=64)
+    losses = []
+    for i in range(120):
+        x, y = syn.train_batch(spec, i)
+        state, m = step(state, {"x": x.reshape(64, -1), "y": y})
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-10:]) < 0.3 * np.mean(losses[:10])

@@ -1,0 +1,73 @@
+"""The paper's VGG-16/CIFAR benchmark at smoke scale + paper-recipe pieces."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import binarize as B
+from repro.core.policy import NONE_POLICY
+from repro.data import synthetic as syn
+from repro.launch.train import make_paper_policy
+from repro.models import vgg
+from repro.optim import schedules
+from repro.optim.sgd import sgd_momentum
+from repro.train import steps as ST
+
+
+def test_vgg16_structure():
+    tree = vgg.init(jax.random.key(0), width_mult=0.125)
+    assert len(tree["params"]["conv"]) == 13  # VGG-16: 13 conv layers
+    assert len(tree["params"]["fc"]) == 3
+
+
+def test_vgg_forward_shapes():
+    tree = vgg.init(jax.random.key(0), width_mult=0.125)
+    x = jax.random.uniform(jax.random.key(1), (4, 32, 32, 3))
+    logits, state = vgg.apply(tree["params"], tree["state"], x, training=True)
+    assert logits.shape == (4, 10)
+    assert not np.isnan(np.asarray(logits)).any()
+
+
+@pytest.mark.parametrize("mode", ["det", "stoch"])
+def test_vgg_binarized_train_step(mode):
+    tree = vgg.init(jax.random.key(0), width_mult=0.125)
+    policy = make_paper_policy(len(tree["params"]["fc"]))
+    opt = sgd_momentum(schedules.paper_eq4(1e-3, 10), momentum=0.9)
+    step = jax.jit(ST.make_train_step(
+        ST.make_classifier_loss(vgg.apply), opt, mode, policy,
+        has_model_state=True))
+    state = ST.init_train_state(tree["params"], opt,
+                                model_state=tree["state"])
+    spec = syn.SyntheticSpec("cifar", n_train=64, batch_size=8)
+    x, y = syn.train_batch(spec, 0)
+    state, metrics = step(state, {"x": x, "y": y})
+    assert np.isfinite(float(metrics["loss"]))
+    # conv kernels (except the first) are clipped masters
+    w = state["params"]["conv"][3]["kernel"]
+    assert float(jnp.abs(w).max()) <= 1.0
+
+
+def test_vgg_learns_a_little():
+    """Short det-binarized run reduces loss on synthetic CIFAR."""
+    tree = vgg.init(jax.random.key(0), width_mult=0.125)
+    policy = make_paper_policy(3)
+    opt = sgd_momentum(schedules.constant(1e-2), momentum=0.9)
+    step = jax.jit(ST.make_train_step(
+        ST.make_classifier_loss(vgg.apply), opt, "det", policy,
+        has_model_state=True))
+    state = ST.init_train_state(tree["params"], opt, model_state=tree["state"])
+    spec = syn.SyntheticSpec("cifar", n_train=512, batch_size=16)
+    losses = []
+    for i in range(60):
+        x, y = syn.train_batch(spec, i)
+        state, m = step(state, {"x": x, "y": y})
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < 0.75 * np.mean(losses[:5]), losses[:3] + losses[-3:]
+
+
+def test_first_conv_and_classifier_stay_fp():
+    policy = make_paper_policy(3)
+    assert not policy.selects("conv/0/kernel")
+    assert policy.selects("conv/5/kernel")
+    assert not policy.selects("fc/2/kernel")
+    assert policy.selects("fc/1/kernel")
