@@ -18,12 +18,14 @@ def main() -> None:
     ap.add_argument("--only", default="")
     args = ap.parse_args()
 
-    from benchmarks import fig23_curves, kernel_bench, roofline_report, table1
+    from benchmarks import (fig23_curves, kernel_bench, roofline_report,
+                            table1, xnor_bench)
     suites = {
         "table1": table1.main,
         "fig23": fig23_curves.main,
         "kernels": kernel_bench.main,
         "roofline": roofline_report.main,
+        "xnor": xnor_bench.main,
     }
     selected = (args.only.split(",") if args.only else list(suites))
     print("name,us_per_call,derived")

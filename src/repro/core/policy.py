@@ -68,3 +68,32 @@ DEFAULT_POLICY = BinarizePolicy()
 
 #: Binarize nothing (the paper's "No Regularizer" baseline).
 NONE_POLICY = BinarizePolicy(include=())
+
+
+# ---------------------------------------------------------------------------
+# XNOR (fully-binary) activation eligibility
+# ---------------------------------------------------------------------------
+
+# Layers whose *inputs* are real-valued stay on the packed-weight path.
+# This guard covers the paper's FC/VGG stacks, where index 0 of `layers/`
+# (FC nets) or `fc/` (the VGG classifier head) consumes raw pixels /
+# conv features. Transformer paths are untouched by it: their stacked scan
+# leaves (`layers/attn/w_qkv`, ...) carry no per-layer index, so under
+# mode="xnor" *every* selected projection binarizes its activations — the
+# transformer's real-valued front (embedding, lm_head) is already kept
+# dense by the weight policy. Conv kernels have no XNOR lowering and are
+# excluded by the default policy's conv pattern.
+_XNOR_EXTRA_EXCLUDE = (
+    r"(^|.*/)(layers|fc)/0/[^/]+$",
+)
+
+#: Which weight-binarized leaves may *also* binarize their activations and
+#: dispatch to the XNOR-popcount engine (``repro.xnor``). A leaf must be
+#: selected by both the weight policy and this one to become an XnorLinear.
+XNOR_POLICY = BinarizePolicy(exclude=_DEFAULT_EXCLUDE + _XNOR_EXTRA_EXCLUDE)
+
+
+def xnor_policy(extra_exclude: Sequence[str] = ()) -> BinarizePolicy:
+    """XNOR eligibility with model-specific real-valued-input layers added."""
+    return BinarizePolicy(
+        exclude=_DEFAULT_EXCLUDE + _XNOR_EXTRA_EXCLUDE + tuple(extra_exclude))

@@ -35,6 +35,17 @@ def batch_axes(mesh: Optional[Mesh]) -> tuple:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
+def mesh_context(mesh: Mesh):
+    """Context manager activating ``mesh`` as the ambient mesh.
+
+    Spans the jax API change: ``jax.set_mesh`` (jax >= 0.5-era) vs entering
+    the ``Mesh`` object itself (jax 0.4.x)."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
+
+
 @dataclasses.dataclass
 class ShardCtx:
     """Activation-sharding helper threaded through model code."""

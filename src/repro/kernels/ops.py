@@ -11,14 +11,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.compat import ceil_to as _ceil_to, on_tpu as _on_tpu
 from repro.core.packing import PACK, pack_bits, pad_to_pack
 from repro.kernels import ref
 from repro.kernels.binary_matmul import binary_matmul_pallas
 from repro.kernels.stoch_binarize import binarize_pack_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 # Global default for the use_pallas dispatch (dry-runs lower the jnp
@@ -29,10 +26,6 @@ _DEFAULT_USE_PALLAS = True
 def set_use_pallas(value: bool) -> None:
     global _DEFAULT_USE_PALLAS
     _DEFAULT_USE_PALLAS = value
-
-
-def _ceil_to(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m
 
 
 def binary_matmul(

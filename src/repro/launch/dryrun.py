@@ -37,7 +37,7 @@ from repro.configs import base as cb                    # noqa: E402
 from repro.core import hlo_analysis as H                # noqa: E402
 from repro.core import roofline as R                    # noqa: E402
 from repro.core.policy import DEFAULT_POLICY            # noqa: E402
-from repro.distributed.sharding import ShardCtx, params_pspecs  # noqa: E402
+from repro.distributed.sharding import ShardCtx, mesh_context, params_pspecs  # noqa: E402
 from repro.launch import specs as SP                    # noqa: E402
 from repro.launch.mesh import make_production_mesh      # noqa: E402
 from repro.models import transformer as T               # noqa: E402
@@ -87,7 +87,7 @@ def lower_train(cfg, shape, mesh, binarize_mode, mu_bf16: bool = False):
         out_shardings=(_ns(mesh, st_pspecs), None),
         donate_argnums=0,
     )
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         lowered = jitted.lower(state_shape, batch_shape)
     return lowered, _train_model_flops(cfg, shape), {
         "fsdp": fsdp, "microbatches": cfg.train_microbatches}
@@ -135,7 +135,7 @@ def lower_serve(cfg, shape, mesh, packed: bool):
             in_shardings=(_ns(mesh, p_pspecs), _ns(mesh, b_pspecs["tokens"])),
             out_shardings=(None, _ns(mesh, cache_ps)),
         )
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             lowered = jitted.lower(params_shape, b_shape["tokens"])
         return lowered, _serve_model_flops(cfg, shape, "prefill"), extra
 
@@ -149,7 +149,7 @@ def lower_serve(cfg, shape, mesh, packed: bool):
         out_shardings=(None, _ns(mesh, b_pspecs["cache"])),
         donate_argnums=1,
     )
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         lowered = jitted.lower(params_shape, b_shape["cache"],
                                b_shape["tokens"])
     return lowered, _serve_model_flops(cfg, shape, "decode"), extra
@@ -182,6 +182,8 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, binarize_mode: str,
     mem["peak_gb"] = (mem["argument_gb"] + mem["output_gb"] + mem["temp_gb"]
                       - mem["alias_gb"])
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # jax<0.5 returns a per-device list
+        ca = ca[0] if ca else {}
     cost = H.analyze(compiled.as_text())
     terms = R.from_hlo_cost(cost, n_chips, model_flops=model_flops,
                             hbm_bytes_per_device=mem["peak_gb"] * 1e9)

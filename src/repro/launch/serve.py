@@ -29,7 +29,8 @@ def main() -> None:
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--packed", action="store_true")
-    ap.add_argument("--binarize", default="det", choices=["det", "stoch"])
+    ap.add_argument("--binarize", default="det",
+                    choices=["det", "stoch", "xnor"])
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)

@@ -4,8 +4,9 @@ embeddings, rotary position embeddings, initializers.
 Models are *binarization-agnostic*: ``train_step`` binarizes the master
 parameter tree (Alg. 1) before calling the forward pass, and the serving path
 may substitute :class:`PackedLinear` leaves (bitpacked binary weights +
-optional per-channel scale); ``apply_linear`` dispatches on the leaf type so
-the same model code serves both.
+optional per-channel scale) or :class:`XnorLinear` leaves (binary weights
+*and* binary activations, XNOR-popcount dot); ``apply_linear`` dispatches on
+the leaf type so the same model code serves all three.
 """
 from __future__ import annotations
 
@@ -44,9 +45,44 @@ class PackedLinear:
         return 2
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class XnorLinear:
+    """Fully-binary linear: weights bitpacked like :class:`PackedLinear`, and
+    *activations* sign-binarized + bitpacked on the fly, so the dot product is
+    integer XNOR-popcount (``repro.xnor``) — no MXU, no full-width activation
+    traffic."""
+
+    packed: jax.Array               # (K // 32, N) int32
+    scale: jax.Array | None         # (N,) f32 or None
+    k: int                          # static original K
+
+    def tree_flatten(self):
+        return (self.packed, self.scale), (self.k,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        packed, scale = children
+        return cls(packed, scale, aux[0])
+
+    @property
+    def shape(self):
+        return (self.k, self.packed.shape[-1])
+
+    @property
+    def ndim(self):
+        return 2
+
+
 def apply_linear(w, x: jax.Array, bias: jax.Array | None = None) -> jax.Array:
-    """x @ w (+ bias), where w is a dense array or a PackedLinear."""
-    if isinstance(w, PackedLinear):
+    """x @ w (+ bias), where w is dense, a PackedLinear, or an XnorLinear."""
+    if isinstance(w, XnorLinear):
+        from repro.xnor import ops as xops
+
+        out = xops.xnor_matmul(x, w.packed, w.scale, k=w.k,
+                               out_dtype=jnp.float32)
+        out = out.astype(x.dtype)
+    elif isinstance(w, PackedLinear):
         from repro.kernels import ops
 
         out = ops.binary_matmul(x, w.packed, w.scale, out_dtype=jnp.float32)

@@ -15,6 +15,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core.binarize import binarize
 from repro.models.layers import apply_linear, batch_norm, he_normal
 
 DEFAULT_HIDDEN = (2048, 2048, 2048)
@@ -42,8 +43,15 @@ def init(key, hidden=DEFAULT_HIDDEN, in_dim: int = IN_DIM,
     return {"params": params, "state": state}
 
 
-def apply(params: dict, state: dict, x: jax.Array, *, training: bool):
-    """x: (B, 784) -> (logits (B, 10), new_state)."""
+def apply(params: dict, state: dict, x: jax.Array, *, training: bool,
+          binary_act: bool = False):
+    """x: (B, 784) -> (logits (B, 10), new_state).
+
+    With ``binary_act=True`` the hidden non-linearity is the Eq.-(1) sign
+    (straight-through gradient) instead of ReLU: every hidden activation is
+    ±1, so hidden layers packed as ``XnorLinear`` compute exact XNOR-popcount
+    dot products (the fully-binary path; the first layer still sees the
+    real-valued input, matching the paper)."""
     new_state = {"layers": []}
     h = x
     n = len(params["layers"])
@@ -53,5 +61,5 @@ def apply(params: dict, state: dict, x: jax.Array, *, training: bool):
                              ls["mean"], ls["var"], training=training)
         new_state["layers"].append({"mean": m, "var": v})
         if i < n - 1:
-            h = jax.nn.relu(h)
+            h = binarize(h, "det") if binary_act else jax.nn.relu(h)
     return h, new_state

@@ -15,6 +15,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core.binarize import binarize
 from repro.models.layers import apply_linear, batch_norm, he_normal
 
 # VGG-16: numbers are output channels, "M" is maxpool.
@@ -67,8 +68,16 @@ def _conv(x: jax.Array, kernel: jax.Array, bias: jax.Array) -> jax.Array:
     return out + bias.astype(out.dtype)
 
 
-def apply(params: dict, state: dict, x: jax.Array, *, training: bool):
-    """x: (B, 32, 32, 3) NHWC -> (logits (B, 10), new_state)."""
+def apply(params: dict, state: dict, x: jax.Array, *, training: bool,
+          binary_act: bool = False):
+    """x: (B, 32, 32, 3) NHWC -> (logits (B, 10), new_state).
+
+    With ``binary_act=True`` the *classifier head's* hidden non-linearity is
+    the Eq.-(1) sign (straight-through gradient) instead of ReLU, so head
+    layers beyond the first — which consumes real-valued conv features —
+    produce ±1 activations and can dispatch to the XNOR-popcount engine when
+    packed as ``XnorLinear``. The conv stack is unchanged (no XNOR conv
+    lowering yet)."""
     new_state: dict[str, Any] = {"conv": [], "fc": []}
     ci = 0
     for v in VGG16_CFG:
@@ -91,5 +100,5 @@ def apply(params: dict, state: dict, x: jax.Array, *, training: bool):
                               ls["mean"], ls["var"], training=training)
         new_state["fc"].append({"mean": m, "var": va})
         if i < n - 1:
-            x = jax.nn.relu(x)
+            x = binarize(x, "det") if binary_act else jax.nn.relu(x)
     return x, new_state

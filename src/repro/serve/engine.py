@@ -22,18 +22,35 @@ from repro.core.binarize import BinarizeMode
 from repro.core.packing import PACK
 from repro.kernels import ops as kops
 from repro.models import transformer as T
-from repro.models.layers import PackedLinear
+from repro.models.layers import PackedLinear, XnorLinear
 
 
 def pack_params(params, policy, mode: str | BinarizeMode = "det",
-                key: Optional[jax.Array] = None, with_scale: bool = True):
+                key: Optional[jax.Array] = None, with_scale: bool = True,
+                xnor_policy=None):
     """Binarize+bitpack every policy-selected >=2-D projection leaf.
 
     Stacked leaves (L, K, N) pack per layer via vmap; the resulting
     PackedLinear children keep the leading stack dims so ``lax.scan`` slices
     them exactly like dense leaves. MoE expert tensors (E-stacked) pack the
     same way. ``with_scale`` stores the per-output-channel mean |w| (BWN
-    alpha) so packed inference tracks the master weights' magnitude."""
+    alpha) so packed inference tracks the master weights' magnitude.
+
+    ``mode="xnor"`` selects the fully-binary engine: weights binarize
+    deterministically (Eq. 1) exactly as ``mode="det"``, but leaves *also*
+    selected by ``xnor_policy`` (default ``core.policy.XNOR_POLICY``) become
+    :class:`XnorLinear` — at apply time their activations are sign-binarized
+    + bitpacked on the fly and the dot runs on the XNOR-popcount kernel.
+    For the paper's FC/VGG stacks the default xnor policy keeps the
+    first (real-valued-input) layer on the PackedLinear path; transformer
+    projections all qualify, since their real-valued front (embedding /
+    lm_head) is excluded from binarization altogether — see
+    ``core.policy.XNOR_POLICY`` for the exact boundary."""
+    xnor = mode == "xnor"
+    if xnor:
+        if xnor_policy is None:
+            from repro.core.policy import XNOR_POLICY as xnor_policy
+        mode = BinarizeMode.DETERMINISTIC
     mode = BinarizeMode.parse(mode)
     leaves_with_paths = jax.tree_util.tree_leaves_with_path(params)
     from repro.core.binarize import _path_str
@@ -63,7 +80,8 @@ def pack_params(params, policy, mode: str | BinarizeMode = "det",
             scale = jnp.mean(jnp.abs(w2.astype(jnp.float32)), axis=1)  # (-1, N)
             scale = scale.reshape(lead + (n_dim,))
         packed = packed.reshape(lead + (k_dim // PACK, n_dim))
-        out.append(PackedLinear(packed, scale, k_dim))
+        cls = XnorLinear if (xnor and xnor_policy.selects(s)) else PackedLinear
+        out.append(cls(packed, scale, k_dim))
     treedef = jax.tree_util.tree_structure(params)
     return jax.tree_util.tree_unflatten(treedef, out)
 
@@ -72,8 +90,9 @@ def packed_param_bytes(params) -> tuple[int, int]:
     """(dense bf16 bytes, packed bytes) over policy-packed leaves."""
     dense = packed = 0
     for leaf in jax.tree_util.tree_leaves(
-            params, is_leaf=lambda x: isinstance(x, PackedLinear)):
-        if isinstance(leaf, PackedLinear):
+            params,
+            is_leaf=lambda x: isinstance(x, (PackedLinear, XnorLinear))):
+        if isinstance(leaf, (PackedLinear, XnorLinear)):
             dense += leaf.k * leaf.packed.shape[-1] * 2 * max(
                 1, int(jnp.prod(jnp.array(leaf.packed.shape[:-2]))))
             packed += leaf.packed.size * 4

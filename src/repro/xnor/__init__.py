@@ -1,0 +1,24 @@
+"""Fully-binary XNOR-popcount compute engine.
+
+The paper's headline FPGA speedup replaces multiply-accumulate with XNOR +
+popcount over *fully binary* operands. The existing ``repro.kernels`` path
+binarizes only weights (activations stay bf16/f32 and the MXU does the dot);
+this subsystem binarizes activations too, so the dot product becomes integer
+bit arithmetic and activations move through HBM bitpacked — 16x fewer
+activation bytes than bf16, 32x fewer than f32.
+
+Modules
+  packing   activation-side bitpacking along the contraction (last) axis
+  kernel    Pallas kernels: fused sign->pack, XNOR-popcount matmul
+  ref       pure-jnp oracles (exact integer ground truth)
+  ops       jit'd public wrappers with padding + backend dispatch
+"""
+from repro.xnor.ops import sign_and_pack, xnor_matmul, xnor_matmul_packed
+from repro.xnor.packing import (pack_activations, unpack_activations,
+                                activation_nbytes, packed_activation_nbytes)
+
+__all__ = [
+    "sign_and_pack", "xnor_matmul", "xnor_matmul_packed",
+    "pack_activations", "unpack_activations",
+    "activation_nbytes", "packed_activation_nbytes",
+]

@@ -1,0 +1,171 @@
+"""Pallas TPU kernels for the fully-binary compute path.
+
+Two kernels, mirroring the paper's FPGA pipeline:
+
+* ``sign_pack_pallas`` — fused sign-binarize (Eq. 1) + bitpack of activations
+  along the last axis, ``(M, K) f32/bf16 -> (M, K//32) int32``. Fusing the
+  two means the full-width activation never round-trips through HBM between
+  binarization and the matmul: only the 1-bit packed words leave the chip.
+
+* ``xnor_matmul_pallas`` — the XNOR-popcount matmul over packed operands:
+
+      dot[m, n] = K - 2 * sum_j popcount(a[m, j] XOR w[j, n])
+
+  with an int32 VMEM accumulator carried across the K grid dimension. This
+  is pure VPU integer work (XOR + popcount + add) — the TPU analogue of the
+  paper's DSP-free XNOR/popcount datapath; no MXU, no floating point until
+  the optional per-channel scale at flush.
+
+Layouts: a_packed (M, K//32) int32   (xnor.packing — packed along last axis)
+         w_packed (K//32, N) int32   (core.packing — packed along first axis)
+         out      (M, N)     int32, or f32 when a scale is fused.
+
+``k_total`` is the *true* contraction length: 0-bit padding on both operands
+XORs to 0, contributes nothing to the popcount, and drops out of the formula
+(see xnor.packing). Block constraints: block_m multiple of 8, block_k a
+multiple of 32 with block_k//32 words per a-block sublane row; on real TPUs
+prefer block_k >= 512 so the packed lane dimension stays reasonably wide.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.compat import CompilerParams as _CompilerParams
+from repro.core.packing import PACK
+
+
+def _block_popcount_dot(a_words: jax.Array, w_words: jax.Array) -> jax.Array:
+    """(bm, bk32) x (bk32, bn) packed words -> (bm, bn) int32 XOR-popcount sum."""
+    x = jnp.bitwise_xor(a_words.astype(jnp.uint32)[:, :, None],
+                        w_words.astype(jnp.uint32)[None, :, :])
+    return jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=1)
+
+
+def _xnor_kernel(a_ref, w_ref, o_ref, acc_ref, *, nk: int, k_total: int):
+    """Grid (i, j, k): accumulate popcounts into acc; emit K - 2*acc at k end."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += _block_popcount_dot(a_ref[...], w_ref[...])
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        o_ref[...] = (k_total - 2 * acc_ref[...]).astype(o_ref.dtype)
+
+
+def _xnor_scaled_kernel(a_ref, w_ref, s_ref, o_ref, acc_ref, *, nk: int,
+                        k_total: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += _block_popcount_dot(a_ref[...], w_ref[...])
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        dot = (k_total - 2 * acc_ref[...]).astype(jnp.float32)
+        o_ref[...] = (dot * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def xnor_matmul_pallas(
+    a_packed: jax.Array,
+    w_packed: jax.Array,
+    scale: jax.Array | None = None,
+    *,
+    k_total: int,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Blocked XNOR-popcount matmul. Shapes must divide the block sizes
+    (the jit wrapper in ``ops.py`` pads arbitrary shapes first)."""
+    m, k32 = a_packed.shape
+    k32w, n = w_packed.shape
+    if k32 != k32w:
+        raise ValueError(f"packed K mismatch: a has {k32} words, w has {k32w}")
+    if block_k % PACK:
+        raise ValueError("block_k must be a multiple of 32")
+    bk32 = block_k // PACK
+    if m % block_m or n % block_n or k32 % bk32:
+        raise ValueError(
+            f"packed shape ({m},{k32})x({k32w},{n}) not divisible by blocks "
+            f"({block_m},{bk32},{block_n}); use ops.xnor_matmul")
+    if out_dtype is None:
+        out_dtype = jnp.int32 if scale is None else jnp.float32
+
+    nk = k32 // bk32
+    grid = (m // block_m, n // block_n, nk)
+    a_spec = pl.BlockSpec((block_m, bk32), lambda i, j, k: (i, k))
+    w_spec = pl.BlockSpec((bk32, block_n), lambda i, j, k: (k, j))
+    o_spec = pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j))
+    scratch = [pltpu.VMEM((block_m, block_n), jnp.int32)]
+
+    if scale is None:
+        kern = functools.partial(_xnor_kernel, nk=nk, k_total=k_total)
+        in_specs = [a_spec, w_spec]
+        args = (a_packed, w_packed)
+    else:
+        kern = functools.partial(_xnor_scaled_kernel, nk=nk, k_total=k_total)
+        s_spec = pl.BlockSpec((1, block_n), lambda i, j, k: (0, j))
+        in_specs = [a_spec, w_spec, s_spec]
+        args = (a_packed, w_packed, scale.reshape(1, n))
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+    )(*args)
+
+
+def _sign_pack_kernel(x_ref, o_ref, *, bk: int):
+    """(bm, bk) float -> (bm, bk//32) int32: Eq. (1) sign bit, packed lanes."""
+    bm = x_ref.shape[0]
+    ones = (x_ref[...] > 0).astype(jnp.uint32)
+    bits = ones.reshape(bm, bk // PACK, PACK)
+    shifts = jnp.arange(PACK, dtype=jnp.uint32)[None, None, :]
+    o_ref[...] = jnp.sum(bits << shifts, axis=2, dtype=jnp.uint32).astype(
+        jnp.int32)
+
+
+def sign_pack_pallas(
+    x: jax.Array,
+    *,
+    block_m: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused sign-binarize + bitpack: (M, K) -> (M, K//32) int32.
+    M % block_m == 0, K % block_k == 0, block_k % 32 == 0 (ops.py pads)."""
+    m, kdim = x.shape
+    if m % block_m or kdim % block_k or block_k % PACK:
+        raise ValueError(f"bad blocks ({block_m},{block_k}) for shape {(m, kdim)}")
+    grid = (m // block_m, kdim // block_k)
+    x_spec = pl.BlockSpec((block_m, block_k), lambda i, j: (i, j))
+    o_spec = pl.BlockSpec((block_m, block_k // PACK), lambda i, j: (i, j))
+    return pl.pallas_call(
+        functools.partial(_sign_pack_kernel, bk=block_k),
+        grid=grid,
+        in_specs=[x_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m, kdim // PACK), jnp.int32),
+        interpret=interpret,
+    )(x)

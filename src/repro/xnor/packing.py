@@ -1,0 +1,76 @@
+"""Bitpacking of binary activations along the contraction (last) axis.
+
+``core.packing`` stores weights ``(K, N) -> (K//32, N)``: packed along the
+*leading* axis so the MXU-facing unpack stays lane-contiguous. Activations
+contract along their *last* axis, so here ``(M, K) -> (M, K//32)``: bit ``b``
+of word ``[m, j]`` holds the sign of ``x[m, j*32 + b]`` (+1 -> 1, <=0 -> 0 —
+the Eq. (1) convention, identical to ``core.packing.pack_bits``).
+
+With both operands packed this way, word ``a[m, j]`` and word ``w[j, n]``
+cover the same 32 contraction positions, so the binary dot product is
+
+    dot[m, n] = K - 2 * sum_j popcount(a[m, j] XOR w[j, n])
+
+(an agreeing bit pair contributes +1, a disagreeing pair -1; XOR counts the
+disagreements). Padding both sides with 0-bits is self-cancelling: padded
+positions XOR to 0, contribute nothing to the popcount, and ``K`` in the
+formula is the *true* contraction length.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.packing import PACK
+
+
+def pad_features(x: jax.Array) -> jax.Array:
+    """Pads the last axis up to a multiple of 32 with zeros (sign bit 0)."""
+    k = x.shape[-1]
+    rem = (-k) % PACK
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[-1] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+def pack_activations(x: jax.Array) -> jax.Array:
+    """Sign-binarizes and packs ``(..., K) -> (..., K//32) int32``.
+
+    Sign convention: x > 0 -> bit 1, x <= 0 -> bit 0 (Eq. 1). K must be a
+    multiple of 32 (use :func:`pad_features` first for ragged K)."""
+    k = x.shape[-1]
+    if k % PACK != 0:
+        raise ValueError(f"last dim {k} not a multiple of {PACK}; use pad_features")
+    bits = (x > 0).astype(jnp.uint32)
+    bits = bits.reshape(x.shape[:-1] + (k // PACK, PACK))
+    shifts = jnp.arange(PACK, dtype=jnp.uint32)
+    words = jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
+    return words.astype(jnp.int32)
+
+
+def unpack_activations(words: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """Inverse of :func:`pack_activations`: ``(..., K//32) int32 -> (..., K)`` ±1."""
+    w = words.astype(jnp.uint32)
+    shifts = jnp.arange(PACK, dtype=jnp.uint32)
+    bits = (w[..., None] >> shifts) & jnp.uint32(1)
+    pm1 = jnp.where(bits == 1, 1.0, -1.0).astype(dtype)
+    return pm1.reshape(words.shape[:-1] + (words.shape[-1] * PACK,))
+
+
+def popcount(words: jax.Array) -> jax.Array:
+    """Per-word population count, exact, any integer dtype."""
+    return jax.lax.population_count(words.astype(jnp.uint32)).astype(jnp.int32)
+
+
+def activation_nbytes(shape: tuple[int, ...], dtype_bytes: int = 2) -> int:
+    """HBM bytes of a dense ``dtype_bytes``-wide activation tensor."""
+    return int(np.prod(shape)) * dtype_bytes
+
+
+def packed_activation_nbytes(shape: tuple[int, ...]) -> int:
+    """HBM bytes of the bitpacked form of a ``(..., K)`` activation tensor."""
+    lead = int(np.prod(shape[:-1])) if len(shape) > 1 else 1
+    return lead * ((shape[-1] + PACK - 1) // PACK) * 4

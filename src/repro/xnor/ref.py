@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the XNOR-popcount engine (exact integer ground truth).
+
+Straight-line jnp with no blocking, mirroring ``kernels/ref.py``: used by the
+parity tests and as the portable fallback on shapes too small to block. All
+three views of the binary dot product are exactly equal (integer arithmetic,
+no rounding):
+
+  * ``xnor_matmul_ref``  — popcount over packed operands (what the kernel does)
+  * ``sign_matmul_ref``  — ``sign(x) @ sign(w)`` in f32 (the semantic spec)
+  * the Pallas kernel in ``xnor.kernel``
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.xnor import packing as apack
+
+
+def sign_pack_ref(x: jax.Array) -> jax.Array:
+    """Fused sign-binarize (Eq. 1) + bitpack along the last axis."""
+    return apack.pack_activations(apack.pad_features(x))
+
+
+def xnor_matmul_ref(
+    a_packed: jax.Array,
+    w_packed: jax.Array,
+    k: int,
+    scale: jax.Array | None = None,
+    out_dtype=None,
+) -> jax.Array:
+    """``dot[m, n] = k - 2 * sum_j popcount(a[m, j] ^ w[j, n])``.
+
+    ``a_packed``: (..., K32) int32, ``w_packed``: (K32, N) int32, ``k``: the
+    true contraction length (0-bit padding on both sides self-cancels).
+    ``out_dtype`` defaults to int32, or f32 when a scale is applied."""
+    if a_packed.shape[-1] != w_packed.shape[0]:
+        raise ValueError(
+            f"packed K mismatch: a has {a_packed.shape[-1]} words, "
+            f"w has {w_packed.shape[0]}")
+    if out_dtype is None:
+        out_dtype = jnp.int32 if scale is None else jnp.float32
+    x = jnp.bitwise_xor(a_packed[..., :, None].astype(jnp.uint32),
+                        w_packed.astype(jnp.uint32))        # (..., K32, N)
+    pc = jax.lax.population_count(x).astype(jnp.int32)
+    dot = k - 2 * jnp.sum(pc, axis=-2)
+    if scale is not None:
+        dot = dot.astype(jnp.float32) * scale.astype(jnp.float32)
+    return dot.astype(out_dtype)
+
+
+def sign_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """The semantic spec: ``sign(x) @ sign(w)`` computed densely in f32."""
+    xs = jnp.where(x > 0, 1.0, -1.0).astype(jnp.float32)
+    ws = jnp.where(w > 0, 1.0, -1.0).astype(jnp.float32)
+    return jnp.dot(xs, ws, preferred_element_type=jnp.float32)
+
+
+def xnor_forward_ref(x: jax.Array, w_packed: jax.Array, k: int,
+                     scale: jax.Array | None = None) -> jax.Array:
+    """End-to-end oracle: sign->pack the activations, then popcount matmul.
+
+    ``w_packed`` covers ``ceil(k/32)`` words (``core.packing`` layout)."""
+    return xnor_matmul_ref(sign_pack_ref(x), w_packed, k, scale)

@@ -1,11 +1,13 @@
 """Unit + property tests for the paper's core technique (Eq. 1-3, Alg. 1)."""
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis")
+hnp = pytest.importorskip("hypothesis.extra.numpy")
+st = pytest.importorskip("hypothesis.strategies")
 
 from repro.core import binarize as B
 from repro.core.policy import DEFAULT_POLICY, NONE_POLICY, BinarizePolicy

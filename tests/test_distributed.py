@@ -67,7 +67,7 @@ class TestSmallMeshDryRun:
             import jax, jax.numpy as jnp
             from repro.configs import base as cb
             from repro.core.policy import DEFAULT_POLICY
-            from repro.distributed.sharding import ShardCtx, params_pspecs
+            from repro.distributed.sharding import ShardCtx, mesh_context, params_pspecs
             from repro.launch import specs as SP
             from repro.models import transformer as T
             from repro.optim import schedules
@@ -89,7 +89,7 @@ class TestSmallMeshDryRun:
                                         is_leaf=lambda x: isinstance(x, P))
             batch = {"tokens": jax.random.randint(jax.random.key(1), (8, 33),
                                                   0, cfg.vocab_size)}
-            with jax.set_mesh(mesh):
+            with mesh_context(mesh):
                 jitted = jax.jit(step, in_shardings=(ns(st_ps),
                                  ns({"tokens": P(("data",), None)})),
                                  out_shardings=(ns(st_ps), None))
@@ -112,7 +112,7 @@ class TestSmallMeshDryRun:
             import jax, jax.numpy as jnp, numpy as np
             from repro.configs import base as cb
             from repro.core.policy import DEFAULT_POLICY
-            from repro.distributed.sharding import ShardCtx
+            from repro.distributed.sharding import ShardCtx, mesh_context
             from repro.launch import specs as SP
             from repro.models import transformer as T
             from repro.optim import schedules
@@ -140,7 +140,7 @@ class TestSmallMeshDryRun:
             st_ps = SP.sanitize_pspecs(jax.eval_shape(lambda: s1), st_ps, mesh)
             ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
                                         is_leaf=lambda x: isinstance(x, P))
-            with jax.set_mesh(mesh):
+            with mesh_context(mesh):
                 s1, m1 = jax.jit(step1, in_shardings=(ns(st_ps),
                     ns({"tokens": P(("data",), None)})),
                     out_shardings=(ns(st_ps), None))(s1, batch)

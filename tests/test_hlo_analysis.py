@@ -82,10 +82,11 @@ class TestCollectives:
             import jax, jax.numpy as jnp
             from jax.sharding import NamedSharding, PartitionSpec as P
             from repro.core import hlo_analysis as H
+            from repro.distributed.sharding import mesh_context
             mesh = jax.make_mesh((4,), ("model",))
             def f(a, b):
                 return (a @ b).sum()
-            with jax.set_mesh(mesh):
+            with mesh_context(mesh):
                 c = jax.jit(f, in_shardings=(
                         NamedSharding(mesh, P(None, "model")),
                         NamedSharding(mesh, P("model", None))),

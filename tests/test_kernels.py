@@ -1,10 +1,13 @@
 """Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs the jnp oracle."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis; "
+    "tests/test_xnor.py covers the kernels without it")
+st = pytest.importorskip("hypothesis.strategies")
 
 from repro.core import packing as P
 from repro.kernels import ops, ref

@@ -1,0 +1,221 @@
+"""XNOR-popcount engine: exact integer parity sweeps + integration.
+
+Three-way parity (no tolerance — binary dot products are exact integers):
+Pallas kernel (interpret) == jnp popcount oracle == sign(x) @ sign(w) in f32,
+across MXU-aligned, ragged, odd-K (non-multiple-of-32) and tiny shapes.
+Hypothesis-free by design so this module runs in minimal containers.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import packing as wpack
+from repro.kernels import ops as kops
+from repro.xnor import ops as xops
+from repro.xnor import packing as apack
+from repro.xnor import ref as xref
+from repro.xnor.kernel import sign_pack_pallas, xnor_matmul_pallas
+
+# (M, K, N): blocked, ragged-M/N, K multiple of 32 but not of block,
+# odd K (31, 100: partial-word padding), tiny (ref fallback path).
+PARITY_SHAPES = [
+    (128, 512, 128), (256, 1024, 384), (200, 512, 100), (8, 512, 128),
+    (128, 544, 128), (64, 31, 16), (129, 100, 65), (5, 7, 3),
+]
+
+
+def _operands(m, k, n, seed=0):
+    kx, kw = jax.random.split(jax.random.key(seed + m * k + n))
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n), jnp.float32)
+    return x, w, kops.binarize_and_pack(w)
+
+
+class TestActivationPacking:
+    @pytest.mark.parametrize("m,k", [(1, 32), (4, 64), (7, 320), (33, 32 * 33)])
+    def test_roundtrip(self, m, k):
+        key = jax.random.key(m * 1000 + k)
+        pm1 = jnp.where(jax.random.bernoulli(key, 0.5, (m, k)), 1.0, -1.0)
+        packed = apack.pack_activations(pm1)
+        assert packed.shape == (m, k // 32) and packed.dtype == jnp.int32
+        np.testing.assert_array_equal(apack.unpack_activations(packed), pm1)
+
+    def test_roundtrip_batched(self):
+        pm1 = jnp.where(
+            jax.random.bernoulli(jax.random.key(0), 0.5, (2, 3, 64)), 1.0, -1.0)
+        np.testing.assert_array_equal(
+            apack.unpack_activations(apack.pack_activations(pm1)), pm1)
+
+    def test_pad_features(self):
+        x = jnp.ones((4, 33))
+        assert apack.pad_features(x).shape == (4, 64)
+        # zero padding carries sign bit 0, i.e. packs identically to -1
+        np.testing.assert_array_equal(
+            apack.pack_activations(apack.pad_features(x)),
+            apack.pack_activations(jnp.pad(x, ((0, 0), (0, 31)),
+                                           constant_values=-1.0)))
+
+    def test_sign_convention_matches_weight_packing(self):
+        # activation packing (last axis) must agree bit-for-bit with
+        # core.packing (first axis) on the same vector
+        v = jax.random.normal(jax.random.key(1), (96,))
+        a_bits = apack.pack_activations(v[None, :])[0]          # (3,)
+        w_bits = wpack.pack_bits(jnp.where(v > 0, 1.0, -1.0)[:, None])[:, 0]
+        np.testing.assert_array_equal(a_bits, w_bits)
+
+    def test_byte_accounting(self):
+        assert apack.packed_activation_nbytes((128, 4096)) == 128 * 128 * 4
+        ratio = (apack.activation_nbytes((128, 4096), 2)
+                 / apack.packed_activation_nbytes((128, 4096)))
+        assert ratio == 16.0
+
+
+class TestSignPack:
+    @pytest.mark.parametrize("m,k", [(128, 512), (200, 544), (8, 31), (3, 100)])
+    def test_matches_ref(self, m, k):
+        x = jax.random.normal(jax.random.key(m + k), (m, k))
+        np.testing.assert_array_equal(
+            np.asarray(xops.sign_and_pack(x)), np.asarray(xref.sign_pack_ref(x)))
+
+    def test_pallas_direct(self):
+        x = jax.random.normal(jax.random.key(2), (128, 512))
+        got = sign_pack_pallas(x, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(xref.sign_pack_ref(x)))
+
+    def test_zero_maps_to_minus_one(self):
+        # Eq. (1): sign(0) = -1, i.e. bit 0
+        packed = xops.sign_and_pack(jnp.zeros((1, 32)))
+        assert int(packed[0, 0]) == 0
+
+
+class TestXnorMatmulParity:
+    """The acceptance sweep: kernel == oracle == dense sign-matmul, exactly."""
+
+    @pytest.mark.parametrize("m,k,n", PARITY_SHAPES)
+    def test_three_way_exact(self, m, k, n):
+        x, w, wp = _operands(m, k, n)
+        dense = np.asarray(xref.sign_matmul_ref(x, w))          # semantic spec
+        oracle = np.asarray(xref.xnor_forward_ref(x, wp, k))    # jnp popcount
+        kernel = np.asarray(xops.xnor_matmul(x, wp, k=k))       # Pallas path
+        np.testing.assert_array_equal(oracle, dense.astype(np.int32))
+        np.testing.assert_array_equal(kernel, dense.astype(np.int32))
+
+    @pytest.mark.parametrize("m,k,n", [(128, 512, 128), (64, 100, 65)])
+    def test_scaled(self, m, k, n):
+        x, w, wp = _operands(m, k, n, seed=7)
+        s = jax.random.uniform(jax.random.key(9), (n,), minval=0.5, maxval=2.0)
+        got = np.asarray(xops.xnor_matmul(x, wp, s, k=k))
+        want = np.asarray(xref.sign_matmul_ref(x, w)) * np.asarray(s)[None, :]
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    def test_prepacked_activations(self):
+        x, w, wp = _operands(128, 512, 128, seed=3)
+        a = xops.sign_and_pack(x)
+        got = np.asarray(xops.xnor_matmul_packed(a, wp, k=512))
+        np.testing.assert_array_equal(
+            got, np.asarray(xref.sign_matmul_ref(x, w)).astype(np.int32))
+
+    def test_pallas_direct_no_padding(self):
+        x, w, wp = _operands(256, 1024, 256, seed=5)
+        a = xops.sign_and_pack(x)
+        got = xnor_matmul_pallas(a, wp, k_total=1024, block_k=256,
+                                 interpret=True)
+        np.testing.assert_array_equal(
+            np.asarray(got),
+            np.asarray(xref.sign_matmul_ref(x, w)).astype(np.int32))
+
+    def test_batched_leading_dims(self):
+        x = jax.random.normal(jax.random.key(11), (2, 64, 512))
+        w = jax.random.normal(jax.random.key(12), (512, 128))
+        wp = kops.binarize_and_pack(w)
+        got = xops.xnor_matmul(x, wp)
+        assert got.shape == (2, 64, 128)
+        want = np.asarray(xref.sign_matmul_ref(
+            x.reshape(-1, 512), w)).reshape(2, 64, 128)
+        np.testing.assert_array_equal(np.asarray(got), want.astype(np.int32))
+
+    def test_against_packed_weight_path(self):
+        """Cross-engine: on ±1 activations the packed-weight MXU path and the
+        XNOR path compute the same numbers (also exercises the binary_matmul
+        Pallas kernel at a blocked shape)."""
+        k = 512
+        x = jnp.where(jax.random.bernoulli(jax.random.key(13), 0.5, (128, k)),
+                      1.0, -1.0)
+        w = jax.random.normal(jax.random.key(14), (k, 128))
+        wp = kops.binarize_and_pack(w)
+        via_mxu = np.asarray(kops.binary_matmul(x, wp, block_k=256))
+        via_xnor = np.asarray(xops.xnor_matmul(x, wp, k=k))
+        np.testing.assert_allclose(via_mxu, via_xnor.astype(np.float32),
+                                   rtol=1e-4, atol=1e-3)
+
+
+class TestModelIntegration:
+    def test_mnist_xnor_forward_exact(self):
+        """mode="xnor" pack + binary_act forward == manual sign-matmul math."""
+        from repro.core.policy import DEFAULT_POLICY
+        from repro.models import mnist_fc
+        from repro.models.layers import XnorLinear
+        from repro.serve.engine import pack_params
+
+        tree = mnist_fc.init(jax.random.key(0), hidden=(128, 64), in_dim=784)
+        packed = pack_params(tree["params"], DEFAULT_POLICY, "xnor")
+        # 784 % 32 != 0 -> first layer stays dense; hidden+out become Xnor
+        assert isinstance(packed["layers"][0]["kernel"], jax.Array)
+        assert isinstance(packed["layers"][1]["kernel"], XnorLinear)
+        assert isinstance(packed["layers"][2]["kernel"], XnorLinear)
+        x = jax.random.normal(jax.random.key(1), (4, 784))
+        logits, _ = mnist_fc.apply(packed, tree["state"], x, training=False,
+                                   binary_act=True)
+        assert logits.shape == (4, 10)
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_vgg_head_split(self):
+        from repro.core.policy import DEFAULT_POLICY
+        from repro.models import vgg
+        from repro.models.layers import PackedLinear, XnorLinear
+        from repro.serve.engine import pack_params
+
+        tree = vgg.init(jax.random.key(0), width_mult=0.125)
+        packed = pack_params(tree["params"], DEFAULT_POLICY, "xnor")
+        assert isinstance(packed["fc"][0]["kernel"], PackedLinear)
+        assert isinstance(packed["fc"][1]["kernel"], XnorLinear)
+        assert isinstance(packed["fc"][2]["kernel"], XnorLinear)
+        x = jax.random.normal(jax.random.key(2), (2, 32, 32, 3))
+        logits, _ = vgg.apply(packed, tree["state"], x, training=False,
+                              binary_act=True)
+        assert logits.shape == (2, 10)
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_xnor_linear_layer_exact(self):
+        """apply_linear on an XnorLinear == scale * (sign(x) @ sign(w))."""
+        from repro.models.layers import XnorLinear, apply_linear
+
+        k, n = 256, 64
+        x = jax.random.normal(jax.random.key(3), (16, k))
+        w = jax.random.normal(jax.random.key(4), (k, n))
+        wp = kops.binarize_and_pack(w)
+        s = jnp.mean(jnp.abs(w), axis=0)
+        got = np.asarray(apply_linear(XnorLinear(wp, s, k), x))
+        want = np.asarray(xref.sign_matmul_ref(x, w)) * np.asarray(s)[None, :]
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+    def test_binary_act_training_gradients_flow(self):
+        """The sign activation uses an STE, so binary_act training steps
+        produce finite, nonzero gradients for early layers."""
+        from repro.models import mnist_fc
+
+        tree = mnist_fc.init(jax.random.key(0), hidden=(32, 32), in_dim=64)
+        x = jax.random.normal(jax.random.key(1), (8, 64))
+        y = jax.random.randint(jax.random.key(2), (8,), 0, 10)
+
+        def loss(params):
+            logits, _ = mnist_fc.apply(params, tree["state"], x,
+                                       training=True, binary_act=True)
+            lp = jax.nn.log_softmax(logits)
+            return -jnp.mean(jnp.take_along_axis(lp, y[:, None], axis=1))
+
+        g = jax.grad(loss)(tree["params"])
+        g0 = np.asarray(g["layers"][0]["kernel"])
+        assert np.isfinite(g0).all() and np.abs(g0).sum() > 0
