@@ -109,6 +109,27 @@ def main(fast: bool = False) -> list[str]:
             f"packed={tpu_packed_s*1e6:.1f}us;"
             f"speedup={rec['tpu_projected_speedup_vs_packed']:.2f}x"))
 
+    # XNOR conv (binary im2col popcount conv): one VGG-shaped layer per
+    # speed tier; the dedicated xnor_conv suite covers the full stack and
+    # owns the shared bytes/roofline math.
+    from benchmarks.xnor_conv_bench import layer_roofline, roofline_csv_rows
+    from repro.xnor import conv as xconv
+
+    conv_shapes = [(8, 16, 16, 128, 128)]
+    if not fast:
+        conv_shapes.append((8, 8, 8, 256, 256))
+    for b, h, w, c, n in conv_shapes:
+        x = jax.random.normal(jax.random.key(7), (b, h, w, c), jnp.float32)
+        wp = xconv.pack_conv_kernel(
+            jax.random.normal(jax.random.key(8), (3, 3, c, n), jnp.float32))
+        t_conv = timed(jax.jit(lambda x, wp, c=c: xconv.xnor_conv2d(
+            x, wp, ksize=(3, 3), c_in=c, use_pallas=False)), x, wp, iters=3)
+        rec = {**layer_roofline(b, h, w, c, n),
+               "cpu_ref_xnor_conv_s": t_conv}
+        records.append(rec)
+        lines += roofline_csv_rows(f"kernel/xnor_conv/{b}x{h}x{w}x{c}->{n}",
+                                   rec)
+
     # fused sign->pack throughput (CPU reference; structural check only)
     xa = jax.random.normal(jax.random.key(6), (128, 4096))
     t_sp = timed(jax.jit(lambda x: xops.sign_and_pack(x)), xa, iters=3)

@@ -19,13 +19,14 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig23_curves, kernel_bench, roofline_report,
-                            table1, xnor_bench)
+                            table1, xnor_bench, xnor_conv_bench)
     suites = {
         "table1": table1.main,
         "fig23": fig23_curves.main,
         "kernels": kernel_bench.main,
         "roofline": roofline_report.main,
         "xnor": xnor_bench.main,
+        "xnor_conv": xnor_conv_bench.main,
     }
     selected = (args.only.split(",") if args.only else list(suites))
     print("name,us_per_call,derived")

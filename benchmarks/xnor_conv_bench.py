@@ -1,0 +1,123 @@
+"""XNOR conv engine benchmarks (the paper's VGG/CIFAR-10 conv stack).
+
+Per-layer comparison of the real-valued conv baseline (bf16
+``lax.conv_general_dilated``) against the binary im2col popcount path,
+reporting the activation HBM bytes each engine moves and roofline-projected
+TPU time. As in the other suites, the bytes columns are the
+platform-independent mechanism; CPU wall times are labeled cpu-ref and only
+meaningful relatively.
+
+Activation bytes are reported like-for-like at the im2col interface: a dense
+bf16 patch matrix (B*OH*OW, kh*kw*C) vs its bitpacked form — exactly 16x
+smaller whenever C is a multiple of 32, i.e. for all of VGG's binarized
+blocks 2-5. The raw input-tensor bytes are also recorded so the kh*kw patch
+duplication the im2col lowering pays is visible rather than hidden.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing as wpack
+from repro.core import roofline as R
+from repro.xnor.conv import (conv_geometry, conv_k, pack_conv_kernel,
+                             patch_nbytes_dense, patch_nbytes_packed,
+                             patch_words, xnor_conv2d)
+
+from benchmarks.common import csv_row, save_json, timed
+
+# (tag, B, H, W, C_in, C_out): one representative 3x3 conv per binarized
+# VGG block at CIFAR-10 spatial sizes (block 1 is excluded by XNOR_POLICY —
+# its row is the real-valued-input contrast).
+VGG_LAYERS = [
+    ("block1_realvalued", 8, 32, 32, 64, 64),
+    ("block2", 8, 16, 16, 128, 128),
+    ("block3", 8, 8, 8, 256, 256),
+    ("block4", 8, 4, 4, 512, 512),
+    ("block5", 8, 2, 2, 512, 512),
+]
+KSIZE = (3, 3)
+
+
+def layer_roofline(b: int, h: int, w: int, c: int, n: int,
+                   ksize=KSIZE) -> dict:
+    """Structural per-layer numbers for a SAME stride-1 conv: HBM bytes each
+    engine moves and the roofline-projected TPU time. Shared with
+    kernel_bench so the two suites can't diverge."""
+    oh, ow, _ = conv_geometry(h, w, ksize, (1, 1), "SAME")
+    k = conv_k(ksize, c)
+    act_in_bf16 = b * h * w * c * 2
+    patches_bf16 = patch_nbytes_dense(b, oh, ow, ksize, c)
+    patches_packed = patch_nbytes_packed(b, oh, ow, ksize, c)
+    out_bytes = b * oh * ow * n * 4
+    w_dense = k * n * 2
+    w_packed = patch_words(ksize, c) * n * 4
+    flops = 2 * b * oh * ow * k * n
+    tpu_dense_s = max((w_dense + act_in_bf16 + out_bytes) / R.HBM_BW,
+                      flops / R.PEAK_FLOPS_BF16)
+    # xnor does no MXU flops: bytes + VPU int ops over 32x fewer words
+    tpu_xnor_s = max((w_packed + patches_packed + out_bytes) / R.HBM_BW,
+                     2 * b * oh * ow * patch_words(ksize, c) * n
+                     / R.PEAK_FLOPS_BF16)
+    return {
+        "shape": [b, h, w, c, n],
+        "activation_bytes_input_bf16": act_in_bf16,
+        "activation_bytes_patches_bf16": patches_bf16,
+        "activation_bytes_patches_packed": patches_packed,
+        "activation_compression": patches_bf16 / patches_packed,
+        "weight_bytes_dense_bf16": w_dense,
+        "weight_bytes_packed": w_packed,
+        "tpu_roofline_dense_s": tpu_dense_s,
+        "tpu_roofline_xnor_s": tpu_xnor_s,
+        "tpu_projected_speedup": tpu_dense_s / tpu_xnor_s,
+    }
+
+
+def roofline_csv_rows(name: str, rec: dict) -> list[str]:
+    """The two standard CSV rows (activation compression, projected time)."""
+    return [
+        csv_row(f"{name}/activation_compression",
+                rec["activation_bytes_patches_packed"],
+                f"{rec['activation_compression']:.1f}x_fewer_activation_bytes"),
+        csv_row(f"{name}/tpu_projected", rec["tpu_roofline_xnor_s"] * 1e6,
+                f"dense={rec['tpu_roofline_dense_s']*1e6:.1f}us;"
+                f"speedup={rec['tpu_projected_speedup']:.2f}x"),
+    ]
+
+
+def main(fast: bool = False) -> list[str]:
+    lines: list[str] = []
+    records = []
+    layers = VGG_LAYERS[1:3] if fast else VGG_LAYERS
+    for tag, b, h, w, c, n in layers:
+        x = jax.random.normal(jax.random.key(0), (b, h, w, c), jnp.float32)
+        wk = jax.random.normal(jax.random.key(1), (*KSIZE, c, n), jnp.float32)
+        wp = pack_conv_kernel(wk)
+
+        dense_fn = jax.jit(lambda x, wk: jax.lax.conv_general_dilated(
+            x.astype(jnp.bfloat16), wk.astype(jnp.bfloat16),
+            window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC")))
+        xnor_fn = jax.jit(lambda x, wp, c=c: xnor_conv2d(
+            x, wp, ksize=KSIZE, c_in=c, use_pallas=False))
+
+        rec = {"layer": tag, **layer_roofline(b, h, w, c, n),
+               "cpu_ref_dense_conv_s": timed(dense_fn, x, wk, iters=3),
+               "cpu_ref_xnor_conv_s": timed(xnor_fn, x, wp, iters=3)}
+        records.append(rec)
+        lines += roofline_csv_rows(f"xnor_conv/{tag}/{b}x{h}x{w}x{c}->{n}",
+                                   rec)
+
+    # whole-stack summary: total activation bytes over VGG's binarized blocks
+    tot_bf16 = sum(r["activation_bytes_patches_bf16"] for r in records
+                   if r["layer"] != "block1_realvalued")
+    tot_pack = sum(r["activation_bytes_patches_packed"] for r in records
+                   if r["layer"] != "block1_realvalued")
+    lines.append(csv_row("xnor_conv/blocks2-5/total_activation_bytes",
+                         tot_pack, f"{tot_bf16/tot_pack:.1f}x_vs_bf16"))
+    save_json("xnor_conv_bench", records)
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -19,7 +19,11 @@ _DEFAULT_EXCLUDE = (
     r".*(scale|gamma|beta|bias)$",
     r".*(^|/)(ln|norm|rmsnorm|batchnorm|bn)[^/]*(/|$).*",
     r".*(^|/)router(/|$).*",
-    r".*(^|/)(A_log|dt_bias|D|conv)(/|$).*",   # SSM dynamics + depthwise conv
+    # SSM dynamics + depthwise-conv *leaves*. 2-D conv stacks
+    # (`conv/<i>/kernel`, matmul-shaped after im2col) are NOT excluded:
+    # Alg. 1 binarizes them like any projection, and under mode="xnor" they
+    # lower through `repro.xnor.conv`.
+    r".*(^|/)(A_log|dt_bias|D|conv)$",
     r".*(^|/)lm_head(/|$).*",
 )
 
@@ -74,17 +78,22 @@ NONE_POLICY = BinarizePolicy(include=())
 # XNOR (fully-binary) activation eligibility
 # ---------------------------------------------------------------------------
 
-# Layers whose *inputs* are real-valued stay on the packed-weight path.
-# This guard covers the paper's FC/VGG stacks, where index 0 of `layers/`
-# (FC nets) or `fc/` (the VGG classifier head) consumes raw pixels /
-# conv features. Transformer paths are untouched by it: their stacked scan
-# leaves (`layers/attn/w_qkv`, ...) carry no per-layer index, so under
+# Layers whose *inputs* are real-valued stay on the packed-weight (or dense)
+# path. This guard covers the paper's FC/VGG stacks, where index 0 of
+# `layers/` (FC nets) or `fc/` (the VGG classifier head) consumes raw pixels
+# / conv features, and VGG's first conv block (`conv/0..1`), which sits
+# closest to the raw pixels — blocks 2-5 lower to `repro.xnor.conv`. This
+# is an *activation* boundary only: the training weight policy
+# (launch.train.make_paper_policy) still binarizes conv/1's weights, and
+# pack_params serves them binarized-dense. Transformer paths are untouched
+# by it: their stacked
+# scan leaves (`layers/attn/w_qkv`, ...) carry no per-layer index, so under
 # mode="xnor" *every* selected projection binarizes its activations — the
 # transformer's real-valued front (embedding, lm_head) is already kept
-# dense by the weight policy. Conv kernels have no XNOR lowering and are
-# excluded by the default policy's conv pattern.
+# dense by the weight policy.
 _XNOR_EXTRA_EXCLUDE = (
     r"(^|.*/)(layers|fc)/0/[^/]+$",
+    r"(^|.*/)conv/[01]/kernel$",
 )
 
 #: Which weight-binarized leaves may *also* binarize their activations and
@@ -97,3 +106,14 @@ def xnor_policy(extra_exclude: Sequence[str] = ()) -> BinarizePolicy:
     """XNOR eligibility with model-specific real-valued-input layers added."""
     return BinarizePolicy(
         exclude=_DEFAULT_EXCLUDE + _XNOR_EXTRA_EXCLUDE + tuple(extra_exclude))
+
+
+#: 2-D conv-stack kernels (VGG-style `conv/<i>/kernel` paths). These are
+#: 4-D (kh, kw, C, N) leaves: under mode="xnor" they pack into XnorConv
+#: (im2col popcount conv); other packing modes leave them dense, since the
+#: packed-weight MXU path has no conv lowering.
+_CONV_KERNEL_RE = re.compile(r"(^|.*/)conv/\d+/kernel$")
+
+
+def is_conv_kernel(path: str) -> bool:
+    return bool(_CONV_KERNEL_RE.fullmatch(path))

@@ -1,13 +1,18 @@
-"""Serving driver: batched generation with optional packed binary weights.
+"""Serving driver: batched inference with optional packed binary weights.
 
 Demonstrates the paper's inference claim end-to-end: the same model served
 with dense master weights vs bitpacked binary weights (+BWN scale), with
 per-request latency stats and the weight-bytes reduction printed (the TPU
-analogue of Table I's inference-time rows).
+analogue of Table I's inference-time rows). Token archs run continuous
+slot-batched generation; the paper's classifiers (mnist_fc, vgg16_cifar10)
+run fixed-batch image inference — ``--binarize xnor`` serves them fully
+binary (XnorLinear FC + XnorConv blocks 2-5 for VGG).
 
-Example:
+Examples:
   PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b --smoke \
       --packed --requests 16 --prompt-len 32 --max-new 16
+  PYTHONPATH=src python -m repro.launch.serve --arch vgg16-cifar10 --smoke \
+      --packed --binarize xnor --requests 32 --slots 8
 """
 from __future__ import annotations
 
@@ -22,6 +27,54 @@ from repro.core.policy import DEFAULT_POLICY
 from repro.models import transformer as T
 from repro.serve.batcher import SlotBatcher
 from repro.serve.engine import ServeEngine, pack_params, packed_param_bytes
+
+
+def serve_classifier(arch: str, args) -> None:
+    """Fixed-batch image-classification serving for the paper's nets."""
+    from repro.data import synthetic as syn
+    from repro.launch.train import make_paper_policy
+    from repro.models import mnist_fc, vgg
+
+    if arch == "mnist_fc":
+        from repro.configs import mnist_fc as C
+        hidden = C.SMOKE_HIDDEN if args.smoke else C.HIDDEN
+        tree = mnist_fc.init(jax.random.key(args.seed), hidden=hidden)
+        apply_fn, n_fc, kind = mnist_fc.apply, len(tree["params"]["layers"]), "mnist"
+    else:
+        from repro.configs import vgg16_cifar10 as C
+        wm = C.SMOKE_WIDTH_MULT if args.smoke else C.WIDTH_MULT
+        tree = vgg.init(jax.random.key(args.seed), width_mult=wm)
+        apply_fn, n_fc, kind = vgg.apply, len(tree["params"]["fc"]), "cifar"
+
+    params, mstate = tree["params"], tree["state"]
+    binary_act = False
+    if args.packed:
+        params = pack_params(params, make_paper_policy(n_fc), args.binarize,
+                             key=jax.random.key(args.seed + 1))
+        dense_b, packed_b = packed_param_bytes(params)
+        binary_act = args.binarize == "xnor"
+        print(f"packed weights ({args.binarize}): {dense_b/1e6:.1f}MB (bf16 "
+              f"dense) -> {packed_b/1e6:.1f}MB "
+              f"({dense_b/max(packed_b,1):.1f}x smaller)")
+
+    fwd = jax.jit(lambda p, s, x: apply_fn(p, s, x, training=False,
+                                           binary_act=binary_act)[0])
+    spec = syn.SyntheticSpec(kind, n_train=max(args.requests, args.slots),
+                             batch_size=args.slots, seed=args.seed)
+    t0, done, lat = time.perf_counter(), 0, []
+    for step in range(-(-args.requests // args.slots)):
+        x, _ = syn.train_batch(spec, step)
+        if arch == "mnist_fc":
+            x = x.reshape(x.shape[0], -1)
+        t1 = time.perf_counter()
+        preds = jax.numpy.argmax(fwd(params, mstate, x), axis=-1)
+        jax.block_until_ready(preds)
+        lat.append(time.perf_counter() - t1)
+        done += min(args.slots, args.requests - done)
+    dt = time.perf_counter() - t0
+    print(f"served {done} requests in {len(lat)} batches of {args.slots}, "
+          f"{dt:.2f}s ({np.median(lat)*1e3:.1f} ms/batch median, "
+          f"{done/dt:.1f} img/s)")
 
 
 def main() -> None:
@@ -39,6 +92,9 @@ def main() -> None:
     args = ap.parse_args()
 
     arch = cb.canonical_arch(args.arch)
+    if arch in ("mnist_fc", "vgg16_cifar10"):
+        serve_classifier(arch, args)
+        return
     cfg = cb.get_config(arch, smoke=args.smoke)
     if cfg.frontend:
         raise SystemExit(f"{arch} uses a stubbed frontend; serve a token arch")

@@ -6,7 +6,10 @@ parameter tree (Alg. 1) before calling the forward pass, and the serving path
 may substitute :class:`PackedLinear` leaves (bitpacked binary weights +
 optional per-channel scale) or :class:`XnorLinear` leaves (binary weights
 *and* binary activations, XNOR-popcount dot); ``apply_linear`` dispatches on
-the leaf type so the same model code serves all three.
+the leaf type so the same model code serves all three. Convolutions get the
+same seam: ``apply_conv2d`` dispatches dense (kh, kw, C, N) kernels to
+``lax.conv_general_dilated`` and :class:`XnorConv` leaves to the binary
+im2col popcount engine in ``repro.xnor.conv``.
 """
 from __future__ import annotations
 
@@ -74,6 +77,42 @@ class XnorLinear:
         return 2
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class XnorConv:
+    """Fully-binary 2-D convolution leaf: the (kh, kw, C, N) kernel is
+    bitpacked along the flattened kh*kw*C contraction axis (per-tap word
+    layout, ``repro.xnor.conv``), and at apply time the input activation is
+    sign-binarized + bitpacked into im2col patches on the fly, so the conv
+    is an integer XNOR-popcount GEMM — no MXU, 1-bit activation traffic."""
+
+    packed: jax.Array               # (kh*kw*ceil(c_in/32), N) int32
+    scale: jax.Array | None         # (N,) f32 or None
+    ksize: tuple[int, int]          # static (kh, kw)
+    c_in: int                       # static input channels
+
+    def tree_flatten(self):
+        return (self.packed, self.scale), (self.ksize, self.c_in)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        packed, scale = children
+        return cls(packed, scale, aux[0], aux[1])
+
+    @property
+    def k(self):
+        """True contraction length kh*kw*c_in."""
+        return self.ksize[0] * self.ksize[1] * self.c_in
+
+    @property
+    def shape(self):
+        return (*self.ksize, self.c_in, self.packed.shape[-1])
+
+    @property
+    def ndim(self):
+        return 4
+
+
 def apply_linear(w, x: jax.Array, bias: jax.Array | None = None) -> jax.Array:
     """x @ w (+ bias), where w is dense, a PackedLinear, or an XnorLinear."""
     if isinstance(w, XnorLinear):
@@ -89,6 +128,26 @@ def apply_linear(w, x: jax.Array, bias: jax.Array | None = None) -> jax.Array:
         out = out.astype(x.dtype)
     else:
         out = jnp.dot(x, w.astype(x.dtype))
+    if bias is not None:
+        out = out + bias.astype(out.dtype)
+    return out
+
+
+def apply_conv2d(w, x: jax.Array, bias: jax.Array | None = None, *,
+                 stride=(1, 1), padding="SAME") -> jax.Array:
+    """conv2d(x, w) (+ bias) in NHWC/HWIO, where w is a dense (kh, kw, C, N)
+    kernel or an :class:`XnorConv` leaf (XNOR-popcount binary conv)."""
+    if isinstance(w, XnorConv):
+        from repro.xnor.conv import ops as cops
+
+        out = cops.xnor_conv2d(x, w.packed, w.scale, ksize=w.ksize,
+                               c_in=w.c_in, stride=stride, padding=padding,
+                               out_dtype=jnp.float32)
+        out = out.astype(x.dtype)
+    else:
+        out = jax.lax.conv_general_dilated(
+            x, w.astype(x.dtype), window_strides=stride, padding=padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
     if bias is not None:
         out = out + bias.astype(out.dtype)
     return out

@@ -4,9 +4,17 @@ Standard VGG-16 configuration (Simonyan & Zisserman) adapted to 32x32
 CIFAR inputs: 13 conv layers in 5 blocks with 2x2 maxpool after each block,
 batch-norm after every layer (the paper normalizes every layer output), and
 a compact FC head (512 -> 512 -> 10), as is conventional for CIFAR-scale
-VGG. Convolutions route through ``lax.conv_general_dilated`` with NHWC/HWIO
-layouts; kernels are binarized by Alg. 1 upstream (first conv and the final
-classifier are excluded by the BNN-standard policy in configs/vgg16_cifar10).
+VGG. Convolutions route through ``apply_conv2d`` (NHWC/HWIO), so a conv
+leaf may be a dense kernel (``lax.conv_general_dilated``, binarized by
+Alg. 1 upstream during training) or an :class:`~repro.models.layers.XnorConv`
+node (serving: binary weights *and* activations, XNOR-popcount im2col conv
+via ``repro.xnor.conv``). Two boundaries keep the raw-pixel side
+real-valued, per the BNN convention the paper follows: *weight*
+binarization (Alg. 1, training and packing) excludes the first conv and
+the final classifier (launch.train.make_paper_policy), and *activation*
+binarization (XNOR serving) additionally keeps all of conv block 1 off the
+binary-activation path (``core.policy.XNOR_POLICY``) — conv/1 then serves
+densely-stored binarized weights on real-valued activations.
 """
 from __future__ import annotations
 
@@ -16,7 +24,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.binarize import binarize
-from repro.models.layers import apply_linear, batch_norm, he_normal
+from repro.models.layers import (apply_conv2d, apply_linear, batch_norm,
+                                 he_normal)
 
 # VGG-16: numbers are output channels, "M" is maxpool.
 VGG16_CFG = (64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
@@ -61,25 +70,24 @@ def _maxpool2x2(x: jax.Array) -> jax.Array:
         x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
 
 
-def _conv(x: jax.Array, kernel: jax.Array, bias: jax.Array) -> jax.Array:
-    out = jax.lax.conv_general_dilated(
-        x, kernel.astype(x.dtype), window_strides=(1, 1), padding="SAME",
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
-    return out + bias.astype(out.dtype)
+def _conv(x: jax.Array, kernel, bias: jax.Array) -> jax.Array:
+    return apply_conv2d(kernel, x, bias, stride=(1, 1), padding="SAME")
 
 
 def apply(params: dict, state: dict, x: jax.Array, *, training: bool,
           binary_act: bool = False):
     """x: (B, 32, 32, 3) NHWC -> (logits (B, 10), new_state).
 
-    With ``binary_act=True`` the *classifier head's* hidden non-linearity is
-    the Eq.-(1) sign (straight-through gradient) instead of ReLU, so head
-    layers beyond the first — which consumes real-valued conv features —
-    produce ±1 activations and can dispatch to the XNOR-popcount engine when
-    packed as ``XnorLinear``. The conv stack is unchanged (no XNOR conv
-    lowering yet)."""
+    With ``binary_act=True`` the non-linearity is the Eq.-(1) sign
+    (straight-through gradient) instead of ReLU exactly on the activations
+    that *feed* binary-path layers: conv outputs 1..11 (the inputs of
+    ``XnorConv`` blocks 2-5) and the head's hidden layers (``XnorLinear``).
+    Both real-valued boundaries keep ReLU — conv/0 -> conv/1 (block 1 stays
+    off the binary-activation path) and conv/12 -> fc/0 (the head input
+    consumes real-valued conv features) — matching
+    ``core.policy.XNOR_POLICY``."""
     new_state: dict[str, Any] = {"conv": [], "fc": []}
-    ci = 0
+    ci, n_conv = 0, len(params["conv"])
     for v in VGG16_CFG:
         if v == "M":
             x = _maxpool2x2(x)
@@ -90,7 +98,8 @@ def apply(params: dict, state: dict, x: jax.Array, *, training: bool,
                               ls["mean"], ls["var"], training=training,
                               axes=(0, 1, 2))
         new_state["conv"].append({"mean": m, "var": va})
-        x = jax.nn.relu(x)
+        sign_act = binary_act and 1 <= ci < n_conv - 1
+        x = binarize(x, "det") if sign_act else jax.nn.relu(x)
         ci += 1
     x = x.reshape(x.shape[0], -1)
     n = len(params["fc"])

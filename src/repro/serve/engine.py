@@ -22,7 +22,7 @@ from repro.core.binarize import BinarizeMode
 from repro.core.packing import PACK
 from repro.kernels import ops as kops
 from repro.models import transformer as T
-from repro.models.layers import PackedLinear, XnorLinear
+from repro.models.layers import PackedLinear, XnorConv, XnorLinear
 
 
 def pack_params(params, policy, mode: str | BinarizeMode = "det",
@@ -41,11 +41,18 @@ def pack_params(params, policy, mode: str | BinarizeMode = "det",
     selected by ``xnor_policy`` (default ``core.policy.XNOR_POLICY``) become
     :class:`XnorLinear` — at apply time their activations are sign-binarized
     + bitpacked on the fly and the dot runs on the XNOR-popcount kernel.
-    For the paper's FC/VGG stacks the default xnor policy keeps the
-    first (real-valued-input) layer on the PackedLinear path; transformer
-    projections all qualify, since their real-valued front (embedding /
-    lm_head) is excluded from binarization altogether — see
-    ``core.policy.XNOR_POLICY`` for the exact boundary."""
+    Conv-stack kernels (4-D ``conv/<i>/kernel`` leaves, VGG) become
+    :class:`XnorConv` the same way — binary im2col popcount conv. Under
+    every other mode (and for xnor-excluded conv layers) a policy-selected
+    conv kernel is binarized but stored *densely* (±1 values [* alpha]; the
+    packed-weight MXU path has no conv lowering), so serving still runs the
+    Alg.-1 inference network. For the paper's FC/VGG stacks the default
+    xnor policy keeps
+    the first (real-valued-input) layer — and VGG's first conv block — on
+    the real-valued/PackedLinear path; transformer projections all qualify,
+    since their real-valued front (embedding / lm_head) is excluded from
+    binarization altogether — see ``core.policy.XNOR_POLICY`` for the exact
+    boundary."""
     xnor = mode == "xnor"
     if xnor:
         if xnor_policy is None:
@@ -54,10 +61,42 @@ def pack_params(params, policy, mode: str | BinarizeMode = "det",
     mode = BinarizeMode.parse(mode)
     leaves_with_paths = jax.tree_util.tree_leaves_with_path(params)
     from repro.core.binarize import _path_str
+    from repro.core.policy import is_conv_kernel
 
     out = []
     for i, (path, leaf) in enumerate(leaves_with_paths):
         s = _path_str(path)
+        if is_conv_kernel(s) and getattr(leaf, "ndim", 0) == 4:
+            if not policy.selects(s):
+                out.append(leaf)
+                continue
+            scale = None
+            if with_scale:
+                scale = jnp.mean(jnp.abs(leaf.astype(jnp.float32)),
+                                 axis=(0, 1, 2))
+            if xnor and xnor_policy.selects(s):
+                from repro.xnor.conv import pack_conv_kernel
+
+                kh, kw, c_in, n_dim = leaf.shape
+                out.append(XnorConv(pack_conv_kernel(leaf), scale,
+                                    (kh, kw), c_in))
+            else:
+                # No packed-weight MXU conv path: serve the Alg.-1 inference
+                # network with densely-stored *binarized* values (±1 [*alpha])
+                # so the weights match what training optimized.
+                from repro.core import binarize as B
+
+                if mode is BinarizeMode.STOCHASTIC:
+                    if key is None:
+                        raise ValueError("stochastic packing requires a key")
+                    wb = B.stochastic_binarize(leaf,
+                                               jax.random.fold_in(key, i))
+                else:
+                    wb = B.deterministic_binarize(leaf)
+                if scale is not None:
+                    wb = (wb.astype(jnp.float32) * scale).astype(leaf.dtype)
+                out.append(wb)
+            continue
         if (not policy.selects(s) or leaf.ndim < 2
                 or leaf.shape[-2] % PACK != 0):
             out.append(leaf)
@@ -89,10 +128,10 @@ def pack_params(params, policy, mode: str | BinarizeMode = "det",
 def packed_param_bytes(params) -> tuple[int, int]:
     """(dense bf16 bytes, packed bytes) over policy-packed leaves."""
     dense = packed = 0
+    packed_types = (PackedLinear, XnorLinear, XnorConv)
     for leaf in jax.tree_util.tree_leaves(
-            params,
-            is_leaf=lambda x: isinstance(x, (PackedLinear, XnorLinear))):
-        if isinstance(leaf, (PackedLinear, XnorLinear)):
+            params, is_leaf=lambda x: isinstance(x, packed_types)):
+        if isinstance(leaf, packed_types):
             dense += leaf.k * leaf.packed.shape[-1] * 2 * max(
                 1, int(jnp.prod(jnp.array(leaf.packed.shape[:-2]))))
             packed += leaf.packed.size * 4

@@ -12,13 +12,19 @@ Modules
   kernel    Pallas kernels: fused sign->pack, XNOR-popcount matmul
   ref       pure-jnp oracles (exact integer ground truth)
   ops       jit'd public wrappers with padding + backend dispatch
+  conv/     binary 2-D convolution lowered onto the popcount GEMM: fused
+            patch-extraction kernel, SAME-padding border correction, oracles
+            (``xnor_conv2d``, ``sign_and_pack_patches``, ``pack_conv_kernel``)
 """
 from repro.xnor.ops import sign_and_pack, xnor_matmul, xnor_matmul_packed
 from repro.xnor.packing import (pack_activations, unpack_activations,
                                 activation_nbytes, packed_activation_nbytes)
+from repro.xnor.conv import (pack_conv_kernel, sign_and_pack_patches,
+                             xnor_conv2d)  # noqa: E402  (needs xnor.ops)
 
 __all__ = [
     "sign_and_pack", "xnor_matmul", "xnor_matmul_packed",
     "pack_activations", "unpack_activations",
     "activation_nbytes", "packed_activation_nbytes",
+    "xnor_conv2d", "sign_and_pack_patches", "pack_conv_kernel",
 ]

@@ -1,0 +1,24 @@
+"""XNOR-popcount binary 2-D convolution engine (the paper's CIFAR-10 path).
+
+Lowers convolution onto the fully-binary GEMM in ``repro.xnor``: a fused
+Pallas kernel sign-binarizes and bitpacks im2col patches along the kh*kw*C
+contraction axis (per-tap word layout), the dot runs on the existing
+``K - 2*popcount(xor)`` kernel, and an exact additive correction restores
+zero-padding semantics at SAME borders (padded pixels contribute 0, not -1).
+
+Modules
+  packing   geometry, per-tap weight layout, border-correction math, bytes
+  kernel    Pallas fused patch-extraction + sign + bitpack
+  ref       pure-jnp oracles (exact integer ground truth)
+  ops       jit'd public wrappers (``xnor_conv2d``, ``sign_and_pack_patches``)
+"""
+from repro.xnor.conv.ops import sign_and_pack_patches, xnor_conv2d
+from repro.xnor.conv.packing import (border_correction, conv_geometry, conv_k,
+                                     pack_conv_kernel, patch_nbytes_dense,
+                                     patch_nbytes_packed, patch_words)
+
+__all__ = [
+    "xnor_conv2d", "sign_and_pack_patches", "pack_conv_kernel",
+    "conv_geometry", "conv_k", "patch_words", "border_correction",
+    "patch_nbytes_dense", "patch_nbytes_packed",
+]

@@ -1,0 +1,155 @@
+"""Geometry, weight layout and byte accounting for the XNOR conv engine.
+
+im2col lowering: a (B, H, W, C) NHWC activation convolved with a
+(kh, kw, C, N) HWIO kernel is a (B*OH*OW, K) x (K, N) matmul with
+K = kh*kw*C, so the binary conv reuses the ``repro.xnor`` popcount-GEMM
+machinery once patches are sign-binarized and bitpacked.
+
+Word layout ("per-tap"): the contraction axis flattens in (kh, kw, C) order
+and each spatial tap's C channels are padded *independently* up to a whole
+number of 32-bit words (``cw = ceil(C/32)``), so tap t owns words
+``[t*cw, (t+1)*cw)``. Two consequences:
+
+* channels pack once per input pixel (the word for pixel (y, x) is the same
+  in every patch that covers it), which is what makes the fused Pallas patch
+  kernel cheap, and
+* the channel-pad bits are 0 on both operands (activations pad with 0,
+  :func:`pack_conv_kernel` pads weights with -1 -> bit 0), so they XOR to 0
+  and drop out of ``dot = K - 2*popcount`` with K the *true* kh*kw*C.
+
+SAME-padding correction: spatially zero-padded border pixels do NOT
+self-cancel — their activation bit is 0 (≡ -1) while the weight bit is the
+real sign bit, so the raw formula counts ``-sign(w)`` where dense zero-padded
+convolution counts 0. Equivalently, a border pixel's *effective* contraction
+length is ``K_eff = K - P*C`` (P out-of-bounds taps). The exact fix is
+additive and depends only on the output coordinate and the weights:
+
+    dot_true[(i,j), n] = dot_raw[(i,j), n] + sum_{t in padded(i,j)} wsum[t, n]
+    wsum[t, n]         = sum_c sign(w)[t, c, n] = 2*popcount(tap t words) - C
+
+:func:`border_correction` builds that (OH*OW, N) table from the packed
+weights alone (a popcount plus a tiny mask matmul); the oracle in ``ref.py``
+proves the corrected output equals dense zero-padded sign-conv exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.packing import PACK
+from repro.kernels import ops as kops
+
+
+def conv_geometry(h: int, w: int, ksize, stride, padding):
+    """Static conv geometry, XLA semantics: (oh, ow, ((ph0,ph1),(pw0,pw1)))."""
+    kh, kw = ksize
+    sh, sw = stride
+    if padding == "SAME":
+        oh, ow = -(-h // sh), -(-w // sw)
+        pth = max((oh - 1) * sh + kh - h, 0)
+        ptw = max((ow - 1) * sw + kw - w, 0)
+        pads = ((pth // 2, pth - pth // 2), (ptw // 2, ptw - ptw // 2))
+    elif padding == "VALID":
+        oh, ow = (h - kh) // sh + 1, (w - kw) // sw + 1
+        pads = ((0, 0), (0, 0))
+    else:
+        (ph0, ph1), (pw0, pw1) = padding
+        oh = (h + ph0 + ph1 - kh) // sh + 1
+        ow = (w + pw0 + pw1 - kw) // sw + 1
+        pads = ((ph0, ph1), (pw0, pw1))
+    if oh < 1 or ow < 1:
+        raise ValueError(f"empty conv output for {(h, w)} k={ksize} s={stride}")
+    return oh, ow, pads
+
+
+def tap_words(c: int) -> int:
+    """int32 words per spatial tap (channels padded to a word boundary)."""
+    return (c + PACK - 1) // PACK
+
+
+def patch_words(ksize, c: int) -> int:
+    """Packed words per im2col patch row: kh*kw*ceil(C/32)."""
+    return ksize[0] * ksize[1] * tap_words(c)
+
+
+def conv_k(ksize, c: int) -> int:
+    """True contraction length kh*kw*C (the K in ``K - 2*popcount``)."""
+    return ksize[0] * ksize[1] * c
+
+
+def pack_conv_kernel(w: jax.Array) -> jax.Array:
+    """Eq.-1 binarize + bitpack a (kh, kw, C, N) kernel to (kh*kw*cw, N) int32
+    in the per-tap word layout (channel pad bits are 0, i.e. -1)."""
+    kh, kw, c, n = w.shape
+    cpad = tap_words(c) * PACK - c
+    wp = jnp.pad(w, ((0, 0), (0, 0), (0, cpad), (0, 0)), constant_values=-1.0)
+    return kops.binarize_and_pack(wp.reshape(kh * kw * tap_words(c) * PACK, n))
+
+
+def kernel_tap_sums(w_packed: jax.Array, ksize, c: int) -> jax.Array:
+    """(kh*kw, N) int32: sum_c sign(w)[tap, c, n], read off the packed words.
+
+    popcount counts the +1 bits; the per-tap channel pad bits are 0, so the
+    -1 count uses the *true* C, not the padded word width."""
+    kh, kw = ksize
+    words = w_packed.reshape(kh * kw, tap_words(c), -1).astype(jnp.uint32)
+    pc = jnp.sum(jax.lax.population_count(words).astype(jnp.int32), axis=1)
+    return 2 * pc - c
+
+
+def padding_mask(h: int, w: int, ksize, stride, padding) -> np.ndarray:
+    """(OH*OW, kh*kw) int32: 1 where tap (dy, dx) of output pixel (i, j)
+    reads a spatially zero-padded input position. Pure numpy (static)."""
+    kh, kw = ksize
+    sh, sw = stride
+    oh, ow, ((ph0, _), (pw0, _)) = conv_geometry(h, w, ksize, stride, padding)
+    rows = np.arange(oh)[:, None] * sh + np.arange(kh)[None, :] - ph0  # (OH,kh)
+    cols = np.arange(ow)[:, None] * sw + np.arange(kw)[None, :] - pw0  # (OW,kw)
+    row_bad = (rows < 0) | (rows >= h)
+    col_bad = (cols < 0) | (cols >= w)
+    mask = row_bad[:, None, :, None] | col_bad[None, :, None, :]
+    return mask.reshape(oh * ow, kh * kw).astype(np.int32)
+
+
+def border_correction(w_packed: jax.Array, h: int, w: int, ksize, stride,
+                      padding, c: int) -> jax.Array | None:
+    """(OH*OW, N) int32 to ADD to the raw popcount dot so zero-padded border
+    taps contribute 0 instead of -sign(w). None when nothing is padded."""
+    mask = padding_mask(h, w, ksize, stride, padding)
+    if not mask.any():
+        return None
+    return jnp.einsum("pt,tn->pn", jnp.asarray(mask),
+                      kernel_tap_sums(w_packed, ksize, c))
+
+
+def conv_epilogue(dot: jax.Array, corr: jax.Array | None,
+                  scale: jax.Array | None, out_dtype,
+                  b: int, oh: int, ow: int, n: int) -> jax.Array:
+    """Shared tail of both conv paths (ops + ref oracle): add the border
+    correction, apply the per-channel scale, resolve out_dtype (int32, or
+    f32 when scaled), reshape (B*OH*OW, N) -> NHWC."""
+    dot = dot.reshape(b, oh * ow, n)
+    if corr is not None:
+        dot = dot + corr[None]
+    if out_dtype is None:
+        out_dtype = jnp.int32 if scale is None else jnp.float32
+    out = dot
+    if scale is not None:
+        out = dot.astype(jnp.float32) * scale.astype(jnp.float32)
+    return out.astype(out_dtype).reshape(b, oh, ow, n)
+
+
+# ---------------------------------------------------------------------------
+# byte accounting (the paper's HBM-traffic argument, conv edition)
+# ---------------------------------------------------------------------------
+
+def patch_nbytes_dense(b: int, oh: int, ow: int, ksize, c: int,
+                       dtype_bytes: int = 2) -> int:
+    """HBM bytes of the dense im2col patch matrix (bf16 by default)."""
+    return b * oh * ow * conv_k(ksize, c) * dtype_bytes
+
+
+def patch_nbytes_packed(b: int, oh: int, ow: int, ksize, c: int) -> int:
+    """HBM bytes of the bitpacked patch matrix (16x less for C % 32 == 0)."""
+    return b * oh * ow * patch_words(ksize, c) * 4

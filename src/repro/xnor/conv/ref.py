@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for the XNOR conv engine (exact integer ground truth).
+
+Mirrors ``xnor/ref.py``: straight-line jnp with no blocking, used by the
+parity tests and as the portable fallback. All three views of the binary
+convolution are exactly equal (integer arithmetic, no rounding):
+
+  * ``xnor_conv2d_ref`` — packed im2col patches -> popcount GEMM -> border
+    correction (what the kernel path computes)
+  * ``sign_conv_ref``   — ``lax.conv(sign(x), sign(w))`` with zero padding
+    in f32 (the semantic spec: padded border pixels contribute 0)
+  * the Pallas path in ``xnor.conv.ops``
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import PACK
+from repro.xnor import packing as apack
+from repro.xnor import ref as xref
+from repro.xnor.conv.packing import (border_correction, conv_epilogue,
+                                     conv_geometry, conv_k, tap_words)
+
+
+def conv_patches_ref(x: jax.Array, ksize, stride=(1, 1),
+                     padding="SAME") -> jax.Array:
+    """Zero-filled im2col: (B, H, W, C) -> (B, OH, OW, kh*kw*C), taps in
+    (kh, kw, C) order (the layout ``pack_conv_kernel`` flattens to)."""
+    b, h, w, _ = x.shape
+    kh, kw = ksize
+    sh, sw = stride
+    oh, ow, pads = conv_geometry(h, w, ksize, stride, padding)
+    xp = jnp.pad(x, ((0, 0), pads[0], pads[1], (0, 0)))
+    taps = [xp[:, dy:dy + (oh - 1) * sh + 1:sh, dx:dx + (ow - 1) * sw + 1:sw]
+            for dy in range(kh) for dx in range(kw)]
+    return jnp.concatenate(taps, axis=-1)
+
+
+def sign_pack_patches_ref(x: jax.Array, ksize, stride=(1, 1),
+                          padding="SAME") -> jax.Array:
+    """Sign-binarize + bitpack patches in the per-tap word layout:
+    (B, H, W, C) -> (B, OH, OW, kh*kw*ceil(C/32)) int32. Spatial zero pad
+    and channel pad both carry sign bit 0."""
+    c = x.shape[-1]
+    kh, kw = ksize
+    p = conv_patches_ref(x, ksize, stride, padding)
+    b, oh, ow, _ = p.shape
+    p = p.reshape(b, oh, ow, kh * kw, c)
+    p = jnp.pad(p, ((0, 0),) * 4 + ((0, tap_words(c) * PACK - c),))
+    return apack.pack_activations(
+        p.reshape(b, oh, ow, kh * kw * tap_words(c) * PACK))
+
+
+def xnor_conv2d_ref(x: jax.Array, w_packed: jax.Array,
+                    scale: jax.Array | None = None, *, ksize, c_in: int,
+                    stride=(1, 1), padding="SAME",
+                    out_dtype=None) -> jax.Array:
+    """End-to-end oracle: packed patches -> ``K - 2*popcount(xor)`` GEMM ->
+    border correction [-> per-channel scale]. Integer-exact against
+    :func:`sign_conv_ref` including SAME-padding borders."""
+    b, h, w, _ = x.shape
+    oh, ow, _ = conv_geometry(h, w, ksize, stride, padding)
+    n = w_packed.shape[-1]
+    a = sign_pack_patches_ref(x, ksize, stride, padding)
+    dot = xref.xnor_matmul_ref(a.reshape(b * oh * ow, -1), w_packed,
+                               conv_k(ksize, c_in))
+    corr = border_correction(w_packed, h, w, ksize, stride, padding, c_in)
+    return conv_epilogue(dot, corr, scale, out_dtype, b, oh, ow, n)
+
+
+def sign_conv_ref(x: jax.Array, w: jax.Array, stride=(1, 1),
+                  padding="SAME") -> jax.Array:
+    """The semantic spec: ``conv(sign(x), sign(w))`` densely in f32, with
+    signs taken BEFORE zero padding so border pixels contribute 0."""
+    _, h, wd, _ = x.shape
+    _, _, pads = conv_geometry(h, wd, w.shape[:2], stride, padding)
+    xs = jnp.where(x > 0, 1.0, -1.0).astype(jnp.float32)
+    ws = jnp.where(w > 0, 1.0, -1.0).astype(jnp.float32)
+    return jax.lax.conv_general_dilated(
+        xs, ws, window_strides=stride, padding=list(pads),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))

@@ -57,19 +57,25 @@ def xnor_matmul_packed(
     block_k: int = 512,
     out_dtype=None,
     use_pallas: bool = True,
+    allow_extra_words: bool = False,
 ) -> jax.Array:
     """Popcount matmul over pre-packed operands: a (..., K32), w (K32, N).
 
-    ``k`` is the true contraction length (static)."""
+    ``k`` is the true contraction length (static). ``allow_extra_words``
+    permits K32 > ceil(k/32), for layouts whose surplus positions are 0-bit
+    on both operand sides and so self-cancel in the popcount (the conv
+    engine's per-tap channel padding); leave it off for the plain FC layout,
+    where a word-count mismatch is always a caller bug."""
     return _xnor_matmul_packed(a_packed, w_packed, scale, k=k,
                                block_m=block_m, block_n=block_n,
                                block_k=block_k, out_dtype=out_dtype,
-                               use_pallas=use_pallas)
+                               use_pallas=use_pallas,
+                               allow_extra_words=allow_extra_words)
 
 
 @functools.partial(
     jax.jit, static_argnames=("k", "block_m", "block_n", "block_k",
-                              "out_dtype", "use_pallas"))
+                              "out_dtype", "use_pallas", "allow_extra_words"))
 def _xnor_matmul_packed(
     a_packed: jax.Array,
     w_packed: jax.Array,
@@ -81,12 +87,14 @@ def _xnor_matmul_packed(
     block_k: int,
     out_dtype,
     use_pallas: bool,
+    allow_extra_words: bool = False,
 ) -> jax.Array:
     *lead, k32 = a_packed.shape
     k32w, n = w_packed.shape
     if k32 != k32w:
         raise ValueError(f"packed K mismatch: a has {k32} words, w has {k32w}")
-    if (k + PACK - 1) // PACK != k32:
+    needed = (k + PACK - 1) // PACK
+    if (k32 < needed) if allow_extra_words else (k32 != needed):
         raise ValueError(f"k={k} inconsistent with {k32} packed words")
     a2 = a_packed.reshape(-1, k32)
     m = a2.shape[0]

@@ -113,3 +113,38 @@ class TestSlotBatcher:
         b.refill()
         np.testing.assert_array_equal(b.prompts()[0],
                                       np.array([9, 9, 9, 9, 1, 2]))
+
+    def test_refill_retires_and_reuses_slot_in_one_step(self):
+        """A slot finishing while the queue is non-empty is retired AND
+        refilled by the same refill() call — no idle round in between."""
+        b = SlotBatcher(n_slots=2, prompt_len=2)
+        for i in range(3):
+            b.submit(np.full(2, i), max_new=1)
+        b.refill()
+        first = [r.uid for r in b.slots]
+        for _ in range(1):
+            b.record(np.arange(2))  # both slots finish this step
+        changed = b.refill()
+        # both finished slots retired; slot 0 immediately holds request 2
+        assert [r.uid for r in b.completed] == first
+        assert changed == [0]
+        assert b.slots[0] is not None and b.slots[0].uid == 2
+        assert b.slots[1] is None
+        assert not b.idle
+
+    def test_all_slots_empty_decodes_masked_padding(self):
+        """With every slot empty, the batch decodes pure padding: the mask
+        is all-False, prompts are all pad_id, and record() is a no-op."""
+        b = SlotBatcher(n_slots=3, prompt_len=4, pad_id=7)
+        b.submit(np.arange(4), max_new=1)
+        b.refill()
+        b.record(np.arange(3))
+        b.refill()  # retires the only request; queue empty
+        assert b.idle and len(b.completed) == 1
+        np.testing.assert_array_equal(b.active_mask(),
+                                      np.zeros(3, dtype=bool))
+        np.testing.assert_array_equal(b.prompts(),
+                                      np.full((3, 4), 7, np.int32))
+        b.record(np.arange(3))  # decode output of an all-empty batch
+        assert all(r is None for r in b.slots)
+        assert len(b.completed[0].generated) == 1  # nothing appended

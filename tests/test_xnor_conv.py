@@ -1,0 +1,202 @@
+"""XNOR conv engine: exact integer parity sweeps + VGG integration.
+
+Three-way parity (no tolerance — binary convolutions are exact integers):
+Pallas patch kernel + popcount GEMM == jnp popcount oracle == dense
+zero-padded sign-conv (``lax.conv(sign(x), sign(w))``), across stride 1/2,
+SAME/VALID, ragged spatial dims, and kh*kw*C not a multiple of 32. SAME
+cases exercise the border correction: without it, every border pixel would
+be off by sum(sign(w)) over its out-of-bounds taps.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.xnor.conv import (conv_geometry, pack_conv_kernel,
+                             patch_nbytes_dense, patch_nbytes_packed,
+                             sign_and_pack_patches, xnor_conv2d)
+from repro.xnor.conv import ref as cref
+from repro.xnor.conv.kernel import patch_pack_pallas
+from repro.xnor.conv.packing import padding_mask
+
+# (b, h, w, c, n, kh, kw, sh, sw, padding): aligned K (C=32 -> K=288),
+# stride 2, ragged spatial + K=144 (not %32), first-conv-like C=3 (K=27),
+# VALID stride 2, 1x1 pointwise, asymmetric kernel+stride.
+CONV_CASES = [
+    (2, 8, 8, 32, 64, 3, 3, 1, 1, "SAME"),
+    (2, 8, 8, 32, 48, 3, 3, 2, 2, "SAME"),
+    (1, 9, 7, 16, 32, 3, 3, 1, 1, "SAME"),
+    (2, 8, 8, 3, 16, 3, 3, 1, 1, "SAME"),
+    (1, 7, 7, 8, 8, 3, 3, 2, 2, "VALID"),
+    (2, 6, 6, 32, 32, 1, 1, 1, 1, "VALID"),
+    (1, 10, 6, 24, 40, 5, 3, 2, 1, "SAME"),
+]
+
+
+def _operands(b, h, w, c, n, kh, kw, seed=0):
+    kx, kwt = jax.random.split(jax.random.key(seed + b * h * w + c * n))
+    x = jax.random.normal(kx, (b, h, w, c), jnp.float32)
+    wk = jax.random.normal(kwt, (kh, kw, c, n), jnp.float32)
+    return x, wk, pack_conv_kernel(wk)
+
+
+class TestPatchPacking:
+    @pytest.mark.parametrize("b,h,w,c,n,kh,kw,sh,sw,pad", CONV_CASES)
+    def test_pallas_matches_ref(self, b, h, w, c, n, kh, kw, sh, sw, pad):
+        x, _, _ = _operands(b, h, w, c, n, kh, kw)
+        got = sign_and_pack_patches(x, ksize=(kh, kw), stride=(sh, sw),
+                                    padding=pad)
+        want = cref.sign_pack_patches_ref(x, (kh, kw), (sh, sw), pad)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_pallas_direct(self):
+        x = jax.random.normal(jax.random.key(1), (2, 8, 8, 32))
+        xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+        got = patch_pack_pallas(xp, ksize=(3, 3), oh=8, ow=8, interpret=True)
+        want = cref.sign_pack_patches_ref(x, (3, 3), (1, 1), "SAME")
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_patch_values_roundtrip(self):
+        """Dense patches of a ±1 image survive the pack exactly (borders and
+        channel pad read back as -1, i.e. bit 0)."""
+        from repro.xnor.packing import unpack_activations
+
+        x = jnp.where(jax.random.bernoulli(jax.random.key(2), 0.5,
+                                           (1, 5, 5, 3)), 1.0, -1.0)
+        packed = sign_and_pack_patches(x, ksize=(3, 3))
+        dense = cref.conv_patches_ref(x, (3, 3))  # zero-filled borders
+        unpacked = unpack_activations(packed)     # (1, 5, 5, 9*32)
+        # per-tap layout: tap t occupies [t*32, t*32+3) of the unpacked axis
+        for t in range(9):
+            np.testing.assert_array_equal(
+                np.asarray(unpacked[..., t * 32:t * 32 + 3]),
+                np.asarray(jnp.where(dense[..., t * 3:(t + 1) * 3] > 0,
+                                     1.0, -1.0)))
+
+
+class TestXnorConvParity:
+    """The acceptance sweep: kernel == oracle == dense sign-conv, exactly."""
+
+    @pytest.mark.parametrize("b,h,w,c,n,kh,kw,sh,sw,pad", CONV_CASES)
+    def test_three_way_exact(self, b, h, w, c, n, kh, kw, sh, sw, pad):
+        x, wk, wp = _operands(b, h, w, c, n, kh, kw)
+        dense = np.asarray(
+            cref.sign_conv_ref(x, wk, (sh, sw), pad)).astype(np.int32)
+        oracle = np.asarray(cref.xnor_conv2d_ref(
+            x, wp, ksize=(kh, kw), c_in=c, stride=(sh, sw), padding=pad))
+        kernel = np.asarray(xnor_conv2d(
+            x, wp, ksize=(kh, kw), c_in=c, stride=(sh, sw), padding=pad))
+        np.testing.assert_array_equal(oracle, dense)
+        np.testing.assert_array_equal(kernel, dense)
+
+    def test_border_correction_is_load_bearing(self):
+        """An all-positive kernel makes the uncorrected border error maximal:
+        every padded tap would contribute -C instead of 0."""
+        x = jnp.ones((1, 4, 4, 8))
+        wk = jnp.ones((3, 3, 8, 4))
+        wp = pack_conv_kernel(wk)
+        got = np.asarray(xnor_conv2d(x, wp, ksize=(3, 3), c_in=8))
+        want = np.asarray(cref.sign_conv_ref(x, wk)).astype(np.int32)
+        np.testing.assert_array_equal(got, want)
+        # corner pixel sees 4 valid taps * 8 channels = 32, center 9*8 = 72
+        assert got[0, 0, 0, 0] == 32 and got[0, 1, 1, 0] == 72
+
+    def test_scaled(self):
+        b, h, w, c, n = 2, 6, 6, 16, 24
+        x, wk, wp = _operands(b, h, w, c, n, 3, 3, seed=7)
+        s = jax.random.uniform(jax.random.key(9), (n,), minval=0.5, maxval=2.0)
+        got = np.asarray(xnor_conv2d(x, wp, s, ksize=(3, 3), c_in=c))
+        want = (np.asarray(cref.sign_conv_ref(x, wk))
+                * np.asarray(s)[None, None, None, :])
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    def test_geometry_same_matches_lax(self):
+        """conv_geometry reproduces XLA SAME semantics (incl. odd sizes)."""
+        for h, w, sh, sw in [(7, 5, 2, 2), (8, 8, 1, 1), (9, 4, 3, 2)]:
+            oh, ow, pads = conv_geometry(h, w, (3, 3), (sh, sw), "SAME")
+            out = jax.lax.conv_general_dilated(
+                jnp.ones((1, h, w, 2)), jnp.ones((3, 3, 2, 1)),
+                window_strides=(sh, sw), padding="SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            assert out.shape[1:3] == (oh, ow)
+
+    def test_padding_mask_counts(self):
+        """3x3 SAME on 4x4: corners lose 5 taps, edges 3, interior 0."""
+        m = padding_mask(4, 4, (3, 3), (1, 1), "SAME").reshape(4, 4, 9)
+        assert m.sum(-1)[0, 0] == 5 and m.sum(-1)[0, 1] == 3
+        assert m.sum(-1)[1, 1] == 0
+
+
+class TestVggIntegration:
+    def test_pack_params_xnor_conv_blocks(self):
+        """mode="xnor" turns conv blocks 2-5 into XnorConv; block 1 (the
+        raw-pixel boundary) and the head split stay as before."""
+        from repro.core.policy import DEFAULT_POLICY
+        from repro.models import vgg
+        from repro.models.layers import PackedLinear, XnorConv, XnorLinear
+        from repro.serve.engine import pack_params
+
+        tree = vgg.init(jax.random.key(0), width_mult=0.125)
+        packed = pack_params(tree["params"], DEFAULT_POLICY, "xnor")
+        kinds = [type(lp["kernel"]) for lp in packed["conv"]]
+        assert kinds[0] is not XnorConv and kinds[1] is not XnorConv
+        assert all(k is XnorConv for k in kinds[2:])
+        assert isinstance(packed["fc"][0]["kernel"], PackedLinear)
+        assert isinstance(packed["fc"][1]["kernel"], XnorLinear)
+        x = jax.random.normal(jax.random.key(2), (2, 32, 32, 3))
+        logits, _ = vgg.apply(packed, tree["state"], x, training=False,
+                              binary_act=True)
+        assert logits.shape == (2, 10)
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_nonxnor_modes_binarize_conv_densely(self):
+        """No packed-weight MXU conv path: under det packing a selected conv
+        kernel keeps its dense array form but carries the Alg.-1 binarized
+        values, so serving runs the network training optimized."""
+        from repro.core.policy import DEFAULT_POLICY
+        from repro.models import vgg
+        from repro.serve.engine import pack_params
+
+        tree = vgg.init(jax.random.key(0), width_mult=0.125)
+        packed = pack_params(tree["params"], DEFAULT_POLICY, "det",
+                             with_scale=False)
+        for lp in packed["conv"]:
+            assert isinstance(lp["kernel"], jax.Array)
+            assert set(np.unique(np.asarray(lp["kernel"]))) <= {-1.0, 1.0}
+        # xnor mode: the xnor-excluded block-1 kernels also serve binarized
+        packed = pack_params(tree["params"], DEFAULT_POLICY, "xnor",
+                             with_scale=False)
+        for lp in packed["conv"][:2]:
+            assert set(np.unique(np.asarray(lp["kernel"]))) <= {-1.0, 1.0}
+
+    def test_xnor_conv_layer_exact(self):
+        """apply_conv2d on an XnorConv == scale * sign-conv, exactly."""
+        from repro.models.layers import XnorConv, apply_conv2d
+
+        c, n = 16, 8
+        x = jax.random.normal(jax.random.key(3), (2, 6, 6, c))
+        wk = jax.random.normal(jax.random.key(4), (3, 3, c, n))
+        s = jnp.mean(jnp.abs(wk), axis=(0, 1, 2))
+        leaf = XnorConv(pack_conv_kernel(wk), s, (3, 3), c)
+        got = np.asarray(apply_conv2d(leaf, x))
+        want = (np.asarray(cref.sign_conv_ref(x, wk))
+                * np.asarray(s)[None, None, None, :])
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+        assert leaf.k == 9 * c and leaf.shape == (3, 3, c, n)
+
+    def test_xnor_policy_conv_boundary(self):
+        from repro.core.policy import DEFAULT_POLICY, XNOR_POLICY
+
+        for i in (0, 1):
+            assert DEFAULT_POLICY.selects(f"conv/{i}/kernel")
+            assert not XNOR_POLICY.selects(f"conv/{i}/kernel")
+        for i in (2, 5, 12):
+            assert XNOR_POLICY.selects(f"conv/{i}/kernel")
+        # SSM depthwise-conv leaves stay excluded everywhere
+        assert not DEFAULT_POLICY.selects("layers/conv")
+
+    def test_byte_accounting(self):
+        # C % 32 == 0 -> exactly 16x vs bf16 patches (the paper's claim)
+        dense = patch_nbytes_dense(8, 16, 16, (3, 3), 128)
+        packed = patch_nbytes_packed(8, 16, 16, (3, 3), 128)
+        assert dense / packed == 16.0
