@@ -1,0 +1,100 @@
+"""Golden execution-plan manifests: compile vs committed, fail loudly.
+
+The per-layer dispatch boundary (which backend serves which layer of the
+paper nets) is a correctness-critical artifact: a silent shift — e.g. a
+policy regex change pushing VGG conv block 1 onto the binary-activation
+path — changes served numerics without failing any kernel test. CI
+compiles the plans for the paper models under det and xnor modes and diffs
+them against the manifests committed in ``benchmarks/golden_plans/``.
+
+  PYTHONPATH=src python -m benchmarks.check_golden_plans          # check
+  PYTHONPATH=src python -m benchmarks.check_golden_plans --write  # regen
+
+Regenerate (and commit) the goldens only when a dispatch change is
+intentional; the diff printed on mismatch is the review artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden_plans")
+
+
+def compiled_plans() -> dict:
+    """name -> plan JSON dict for every golden-checked (arch, mode) cell."""
+    from benchmarks.plan_bench import MODES, paper_model_trees
+    from repro.engine import compile_plan
+
+    out = {}
+    for arch, (params, policy) in paper_model_trees().items():
+        for mode in MODES:
+            plan = compile_plan(params, policy, mode, warn=False)
+            out[f"{arch}_{mode}"] = plan.to_json()
+    return out
+
+
+def _diff(name: str, want: dict, got: dict) -> list[str]:
+    lines = []
+    wl = {r["path"]: r for r in want.get("layers", ())}
+    gl = {r["path"]: r for r in got.get("layers", ())}
+    for path in sorted(set(wl) | set(gl)):
+        w, g = wl.get(path), gl.get(path)
+        if w == g:
+            continue
+        if w is None:
+            lines.append(f"  {name}: NEW layer {path} -> {g['backend']}")
+        elif g is None:
+            lines.append(f"  {name}: MISSING layer {path} "
+                         f"(was {w['backend']})")
+        else:
+            for key in sorted(set(w) | set(g)):
+                if w.get(key) != g.get(key):
+                    lines.append(f"  {name}: {path}.{key}: "
+                                 f"{w.get(key)!r} -> {g.get(key)!r}")
+    for key in ("version", "mode", "with_scale"):
+        if want.get(key) != got.get(key):
+            lines.append(f"  {name}: {key}: {want.get(key)!r} -> "
+                         f"{got.get(key)!r}")
+    return lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--write", action="store_true",
+                    help="(re)write the golden manifests instead of checking")
+    args = ap.parse_args(argv)
+
+    plans = compiled_plans()
+    if args.write:
+        os.makedirs(GOLDEN_DIR, exist_ok=True)
+        for name, d in plans.items():
+            path = os.path.join(GOLDEN_DIR, f"{name}.json")
+            with open(path, "w") as f:
+                json.dump(d, f, indent=1, sort_keys=True)
+                f.write("\n")
+            print(f"wrote {path}")
+        return 0
+
+    failures: list[str] = []
+    for name, got in plans.items():
+        path = os.path.join(GOLDEN_DIR, f"{name}.json")
+        if not os.path.exists(path):
+            failures.append(f"  {name}: golden manifest missing ({path})")
+            continue
+        with open(path) as f:
+            want = json.load(f)
+        failures.extend(_diff(name, want, got))
+    if failures:
+        print("golden plan mismatch — dispatch boundary changed. If "
+              "intentional, regen with --write and commit:", file=sys.stderr)
+        print("\n".join(failures), file=sys.stderr)
+        return 1
+    print(f"golden plans OK ({len(plans)} manifests)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,72 @@
+"""Execution-plan report for the paper models (suite name: ``plans``).
+
+Compiles the per-layer dispatch plan (``repro.engine.compile_plan``) for
+the full-size paper nets under ``det`` and ``xnor`` serving modes and
+reports, per layer, the assigned backend and the HBM bytes it moves vs the
+dense baseline — plus the plan-wide totals and roofline-projected times.
+All arithmetic comes from the shared ``repro.engine.costs`` model, so these
+numbers, the xnor benches and the serve-time ``--plan-report`` agree by
+construction. Parameter trees are built with ``jax.eval_shape`` (shapes
+only, no weight allocation), so the suite is near-free.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.engine import compile_plan, plan_report
+from repro.launch.train import make_paper_policy
+
+from benchmarks.common import csv_row, save_json
+
+MODES = ("det", "xnor")
+
+
+def paper_model_trees() -> dict:
+    """arch -> (abstract params tree, policy), full paper-scale shapes."""
+    from repro.configs import mnist_fc as MC
+    from repro.configs import vgg16_cifar10 as VC
+    from repro.models import mnist_fc, vgg
+
+    fc = jax.eval_shape(
+        lambda: mnist_fc.init(jax.random.key(0), hidden=MC.HIDDEN))
+    cnn = jax.eval_shape(
+        lambda: vgg.init(jax.random.key(0), width_mult=VC.WIDTH_MULT))
+    return {
+        "mnist_fc": (fc["params"], make_paper_policy(len(MC.HIDDEN) + 1)),
+        "vgg16_cifar10": (cnn["params"], make_paper_policy(3)),
+    }
+
+
+def main(fast: bool = False) -> list[str]:
+    lines: list[str] = []
+    records = []
+    batch = 8
+    for arch, (params, policy) in paper_model_trees().items():
+        for mode in MODES:
+            plan = compile_plan(params, policy, mode, warn=False)
+            rows = plan_report(plan, batch=batch)
+            dense_b = sum(r["weight_bytes_dense"] for r in rows)
+            plan_b = sum(r["weight_bytes"] for r in rows)
+            by_backend: dict[str, int] = {}
+            for r in rows:
+                by_backend[r["backend"]] = by_backend.get(r["backend"], 0) + 1
+            records.append({"arch": arch, "mode": mode, "batch": batch,
+                            "weight_bytes_dense": dense_b,
+                            "weight_bytes_plan": plan_b,
+                            "layers_by_backend": by_backend, "rows": rows})
+            lines.append(csv_row(
+                f"plans/{arch}/{mode}/weight_bytes", plan_b,
+                f"dense={dense_b};reduction={dense_b / max(plan_b, 1):.1f}x;"
+                + ";".join(f"{k}={v}" for k, v in sorted(by_backend.items()))))
+            if not fast:
+                for r in rows:
+                    lines.append(csv_row(
+                        f"plans/{arch}/{mode}/{r['path']}",
+                        r["weight_bytes"],
+                        f"backend={r['backend']};reason={r['reason']}"))
+    save_json("plan_report", records)
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

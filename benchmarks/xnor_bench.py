@@ -12,14 +12,16 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import packing as wpack
-from repro.core import roofline as R
+from repro.engine import costs as ecosts
 from repro.kernels import ops as kops
 from repro.xnor import ops as xops
 from repro.xnor import packing as xpack
 from repro.xnor import ref as xref
 
 from benchmarks.common import csv_row, save_json, timed
+
+#: report label -> engine-registry backend name (the cost model's key)
+ENGINES = {"dense": "dense", "packed_weight": "packed", "xnor": "xnor"}
 
 
 def xnor_cpu_ref(x, wp, k: int, chunk: int = 512):
@@ -31,14 +33,10 @@ def xnor_cpu_ref(x, wp, k: int, chunk: int = 512):
 
 
 def layer_bytes(m: int, k: int, n: int) -> dict:
-    """HBM bytes per (M,K)x(K,N) layer for each engine (out always f32)."""
-    out = m * n * 4
-    return {
-        "dense": k * n * 2 + m * k * 2 + out,
-        "packed_weight": wpack.packed_nbytes((k, n)) + m * k * 2 + out,
-        "xnor": (wpack.packed_nbytes((k, n))
-                 + xpack.packed_activation_nbytes((m, k)) + out),
-    }
+    """HBM bytes per (M,K)x(K,N) layer for each engine (out always f32),
+    straight from the shared ``repro.engine.costs`` model."""
+    return {label: ecosts.gemm_cost(b, m, k, n, with_scale=False)["bytes"]
+            for label, b in ENGINES.items()}
 
 
 def main(fast: bool = False) -> list[str]:
@@ -60,15 +58,10 @@ def main(fast: bool = False) -> list[str]:
             lambda x, wp, k=k: xnor_cpu_ref(x, wp, k)), x, wp, iters=3)
 
         b = layer_bytes(m, k, n)
-        flops = 2 * m * k * n
-        t = {
-            "dense": max(b["dense"] / R.HBM_BW, flops / R.PEAK_FLOPS_BF16),
-            "packed_weight": max(b["packed_weight"] / R.HBM_BW,
-                                 flops / R.PEAK_FLOPS_BF16),
-            # xnor replaces the MXU dot with VPU int ops over 32x fewer words
-            "xnor": max(b["xnor"] / R.HBM_BW,
-                        2 * m * (k // 32) * n / R.PEAK_FLOPS_BF16),
-        }
+        # xnor replaces the MXU dot with VPU int ops over 32x fewer words —
+        # the op-count difference is inside the shared cost model
+        t = {label: ecosts.roofline_seconds(be, m, k, n, with_scale=False)
+             for label, be in ENGINES.items()}
         act_ratio = (xpack.activation_nbytes((m, k), 2)
                      / xpack.packed_activation_nbytes((m, k)))
         rec = {"shape": [m, k, n], "bytes": b, "tpu_roofline_s": t,

@@ -63,10 +63,13 @@ def xnor_eval(params, model_state, spec):
     Training ran with ReLU activations, so the BN running stats are
     recalibrated under the sign-activation forward first (same recipe as
     det-evaluating a stoch-trained net)."""
-    from repro.serve.engine import pack_params
+    from repro.engine import compile_plan, format_plan_table, plan_report
     from repro.train.steps import accuracy
 
-    packed = pack_params(params, POLICY, "xnor")
+    plan = compile_plan(params, POLICY, "xnor")
+    print("\nexecution plan (per-layer dispatch):")
+    print(format_plan_table(plan_report(plan, batch=64)))
+    packed = plan.pack(params)
     bact_apply = lambda p, s, x, training: mnist_fc.apply(  # noqa: E731
         p, s, x, training=training, binary_act=True)
     cal = [syn.train_batch(spec, 98_000 + j)[0].reshape(-1, 784)

@@ -54,6 +54,18 @@ class BinarizePolicy:
             return False
         return not any(p.fullmatch(path) for p in self._exc)
 
+    def excluded_by(self, path: str) -> str | None:
+        """The first exclude pattern blocking an otherwise-included path
+        (None if the path is selected or matches no include pattern). Used
+        by the execution-plan compiler to record *why* a layer was kept off
+        a binary backend."""
+        if not any(p.fullmatch(path) for p in self._inc):
+            return None
+        for p in self._exc:
+            if p.fullmatch(path):
+                return p.pattern
+        return None
+
     def selected_paths(self, params) -> list[str]:
         import jax
 
@@ -106,6 +118,17 @@ def xnor_policy(extra_exclude: Sequence[str] = ()) -> BinarizePolicy:
     """XNOR eligibility with model-specific real-valued-input layers added."""
     return BinarizePolicy(
         exclude=_DEFAULT_EXCLUDE + _XNOR_EXTRA_EXCLUDE + tuple(extra_exclude))
+
+
+_XNOR_BOUNDARY_RES = tuple(re.compile(p) for p in _XNOR_EXTRA_EXCLUDE)
+
+
+def is_xnor_boundary(path: str) -> bool:
+    """True iff ``path`` is excluded from binary activations *because its
+    input is real-valued* (the Alg.-1 first-layer / first-conv-block
+    boundary patterns), as opposed to a generic policy exclusion. The plan
+    compiler uses this to phrase the per-layer reason."""
+    return any(p.fullmatch(path) for p in _XNOR_BOUNDARY_RES)
 
 
 #: 2-D conv-stack kernels (VGG-style `conv/<i>/kernel` paths). These are

@@ -1,0 +1,66 @@
+"""Execution-plan compiler: backend registry + per-layer dispatch plans.
+
+The paper's nets are heterogeneous pipelines — real-valued first layers,
+packed-weight binary-matmul layers, fully-binary XNOR layers — and the win
+(FINN-style) comes from *compiling* a per-layer plan of which datapath each
+layer gets, instead of hard-coding the boundary in pack/apply code. This
+package makes the engine choice a first-class, inspectable artifact.
+
+Architecture map::
+
+    registry.py   BackendSpec + register_backend/get_backend/backends;
+                  type-keyed apply dispatch (apply_linear / apply_conv2d)
+                  used by models/layers — no isinstance chains anywhere.
+    backends.py   The five built-ins, highest priority first:
+                    xnor_conv        fully-binary im2col popcount conv
+                    xnor             fully-binary FC (repro.xnor)
+                    packed           bitpacked weights on the MXU engine
+                    binarized_dense  Alg.-1 ±1 values stored densely (conv
+                                     fallback — no packed conv lowering)
+                    dense            full-width master weights
+    plan.py       compile_plan(params, policy, mode) -> ExecutionPlan:
+                  per-path backend + reason + full eligibility map;
+                  plan.pack(params) replaces the old pack_params monolith;
+                  save()/load() JSON manifests; plan_report()/
+                  format_plan_table() cost every layer under every
+                  eligible backend.
+    costs.py      Shared bytes/ops cost model (one source of truth for
+                  benchmarks + roofline projections).
+
+Registering a new backend (e.g. int4, stochastic-ensemble, fused BN-xnor)::
+
+    from repro.engine import BackendSpec, register_backend
+    register_backend(BackendSpec(
+        name="int4", kinds=("linear",), priority=25, leaf_type=Int4Linear,
+        eligible=lambda lc: (lc.selected and lc.ndim >= 2, "policy"),
+        pack=pack_int4, apply=apply_int4, cost=cost_int4))
+
+The plan compiler and the serving stack pick it up with no edits to
+models/layers, serve/engine or launch/serve.
+
+Plan manifest format (JSON, golden-checked in CI against
+``benchmarks/golden_plans/*.json``)::
+
+    {"version": 1, "mode": "xnor", "with_scale": true,
+     "layers": [{"path": "conv/2/kernel", "index": 8,
+                 "shape": [3, 3, 128, 256], "backend": "xnor_conv",
+                 "reason": "selected",
+                 "eligible": {"xnor_conv": "ok", "binarized_dense": "ok",
+                              "dense": "ok"}}, ...]}
+"""
+from repro.engine.backends import (BINARIZED_DENSE, DENSE, PACKED, XNOR,
+                                   XNOR_CONV)
+from repro.engine.plan import (ExecutionPlan, LayerAssignment, compile_plan,
+                               format_plan_table, plan_report)
+from repro.engine.registry import (BackendSpec, LeafContext, PackContext,
+                                   backend_for_leaf, backend_names, backends,
+                                   get_backend, register_backend,
+                                   unregister_backend)
+
+__all__ = [
+    "BackendSpec", "LeafContext", "PackContext", "ExecutionPlan",
+    "LayerAssignment", "compile_plan", "plan_report", "format_plan_table",
+    "register_backend", "unregister_backend", "get_backend", "backends",
+    "backend_names", "backend_for_leaf", "DENSE", "PACKED", "XNOR",
+    "XNOR_CONV", "BINARIZED_DENSE",
+]

@@ -1,0 +1,227 @@
+"""Built-in layer backends: dense, packed, xnor, xnor_conv, binarized_dense.
+
+Each backend bundles the eligibility rule, pack transform, apply
+implementation and cost model for one datapath and registers itself with
+``repro.engine.registry``. The pack transforms are bit-for-bit the ones the
+legacy ``serve.engine.pack_params`` monolith applied (same PRNG key folding
+by leaf index, same scale axes), so a compiled plan packs a tree into
+exactly the pytree the old code produced.
+
+Priority order (highest wins among eligible):
+
+  xnor_conv (40) > xnor (30) > packed (20) > binarized_dense (10) > dense (0)
+
+To add backend N+1, write these four functions and call
+``register_backend`` — no edits to models/layers, serve/engine or the plan
+compiler are needed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import binarize as B
+from repro.core.binarize import BinarizeMode
+from repro.core.packing import PACK
+from repro.engine import costs
+from repro.engine.registry import (BackendSpec, LeafContext, PackContext,
+                                   register_backend)
+from repro.models.layers import PackedLinear, XnorConv, XnorLinear
+
+
+# ---------------------------------------------------------------------------
+# eligibility predicates
+# ---------------------------------------------------------------------------
+
+def _dense_eligible(lc: LeafContext) -> tuple[bool, str]:
+    return True, "ok"
+
+
+def _packable(lc: LeafContext) -> tuple[bool, str]:
+    """Shared gate for the bitpacked-weight matmul backends."""
+    if not lc.selected:
+        return False, "policy-excluded"
+    if lc.is_conv:
+        return False, "conv kernel (no packed-weight MXU conv lowering)"
+    if lc.ndim < 2:
+        return False, f"ndim={lc.ndim} < 2 (not matmul-shaped)"
+    if lc.shape[-2] % PACK != 0:
+        return False, f"K={lc.shape[-2]} % {PACK} != 0"
+    return True, "ok"
+
+
+def _xnor_gate(lc: LeafContext) -> tuple[bool, str]:
+    """Shared mode/activation-policy gate for the fully-binary backends."""
+    if lc.mode != "xnor":
+        return False, f"mode={lc.mode} != xnor"
+    if not lc.xnor_selected:
+        return False, ("xnor-policy-excluded (real-valued-input boundary)"
+                       if lc.xnor_boundary else "xnor-policy-excluded")
+    return True, "ok"
+
+
+def _xnor_eligible(lc: LeafContext) -> tuple[bool, str]:
+    ok, why = _packable(lc)
+    if not ok:
+        return ok, why
+    return _xnor_gate(lc)
+
+
+def _conv_selected(lc: LeafContext) -> tuple[bool, str]:
+    if not lc.is_conv:
+        return False, "not a conv-stack kernel"
+    if not lc.selected:
+        return False, "policy-excluded"
+    return True, "ok"
+
+
+def _xnor_conv_eligible(lc: LeafContext) -> tuple[bool, str]:
+    ok, why = _conv_selected(lc)
+    if not ok:
+        return ok, why
+    return _xnor_gate(lc)
+
+
+# ---------------------------------------------------------------------------
+# pack transforms (bit-identical to the legacy pack_params monolith)
+# ---------------------------------------------------------------------------
+
+def _pack_dense(lc: LeafContext, leaf, pc: PackContext):
+    return leaf
+
+
+def _binarize_values(lc: LeafContext, leaf, pc: PackContext):
+    if pc.weight_mode is BinarizeMode.STOCHASTIC:
+        if pc.key is None:
+            raise ValueError("stochastic packing requires a key")
+        return B.stochastic_binarize(leaf, jax.random.fold_in(pc.key, lc.index))
+    return B.deterministic_binarize(leaf)
+
+
+def _pack_binarized_dense(lc: LeafContext, leaf, pc: PackContext):
+    """Binarized values (±1 [* alpha]) kept in dense array form — the Alg.-1
+    inference network for conv layers with no bitpacked lowering."""
+    scale = None
+    if pc.with_scale:
+        scale = jnp.mean(jnp.abs(leaf.astype(jnp.float32)), axis=(0, 1, 2))
+    wb = _binarize_values(lc, leaf, pc)
+    if scale is not None:
+        wb = (wb.astype(jnp.float32) * scale).astype(leaf.dtype)
+    return wb
+
+
+def _pack_linear(cls, lc: LeafContext, leaf, pc: PackContext):
+    """Binarize + bitpack a (..., K, N) projection into ``cls``. Stacked
+    leaves (L, K, N) pack per layer via vmap so ``lax.scan`` slices the
+    result exactly like dense leaves."""
+    from repro.kernels import ops as kops
+
+    k_dim, n_dim = leaf.shape[-2], leaf.shape[-1]
+    lead = leaf.shape[:-2]
+    w2 = leaf.reshape((-1, k_dim, n_dim))
+    if pc.weight_mode is BinarizeMode.STOCHASTIC:
+        if pc.key is None:
+            raise ValueError("stochastic packing requires a key")
+        ks = jax.random.split(jax.random.fold_in(pc.key, lc.index),
+                              w2.shape[0])
+        packed = jax.vmap(
+            lambda w, kk: kops.binarize_and_pack(w, kk, stochastic=True)
+        )(w2, ks)
+    else:
+        packed = jax.vmap(
+            lambda w: kops.binarize_and_pack(w, stochastic=False))(w2)
+    scale = None
+    if pc.with_scale:
+        scale = jnp.mean(jnp.abs(w2.astype(jnp.float32)), axis=1)  # (-1, N)
+        scale = scale.reshape(lead + (n_dim,))
+    packed = packed.reshape(lead + (k_dim // PACK, n_dim))
+    return cls(packed, scale, k_dim)
+
+
+def _pack_xnor_conv(lc: LeafContext, leaf, pc: PackContext):
+    from repro.xnor.conv import pack_conv_kernel
+
+    scale = None
+    if pc.with_scale:
+        scale = jnp.mean(jnp.abs(leaf.astype(jnp.float32)), axis=(0, 1, 2))
+    kh, kw, c_in, _ = leaf.shape
+    return XnorConv(pack_conv_kernel(leaf), scale, (kh, kw), c_in)
+
+
+# ---------------------------------------------------------------------------
+# apply implementations
+# ---------------------------------------------------------------------------
+
+def _apply_dense(w, x, *, stride=None, padding=None):
+    if stride is None:
+        return jnp.dot(x, w.astype(x.dtype))
+    return jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype), window_strides=stride, padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _apply_packed(w: PackedLinear, x):
+    from repro.kernels import ops
+
+    out = ops.binary_matmul(x, w.packed, w.scale, out_dtype=jnp.float32)
+    return out.astype(x.dtype)
+
+
+def _apply_xnor(w: XnorLinear, x):
+    from repro.xnor import ops as xops
+
+    out = xops.xnor_matmul(x, w.packed, w.scale, k=w.k, out_dtype=jnp.float32)
+    return out.astype(x.dtype)
+
+
+def _apply_xnor_conv(w: XnorConv, x, *, stride=(1, 1), padding="SAME"):
+    from repro.xnor.conv import ops as cops
+
+    out = cops.xnor_conv2d(x, w.packed, w.scale, ksize=w.ksize, c_in=w.c_in,
+                           stride=stride, padding=padding,
+                           out_dtype=jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# registration
+# ---------------------------------------------------------------------------
+
+DENSE = register_backend(BackendSpec(
+    name="dense", kinds=("linear", "conv"), priority=0, leaf_type=None,
+    eligible=_dense_eligible, pack=_pack_dense, apply=_apply_dense,
+    cost=functools.partial(costs.gemm_cost, "dense"),
+    doc="Full-width master weights on the MXU (matmul or lax.conv)."))
+
+BINARIZED_DENSE = register_backend(BackendSpec(
+    name="binarized_dense", kinds=("conv",), priority=10, leaf_type=None,
+    eligible=_conv_selected, pack=_pack_binarized_dense, apply=_apply_dense,
+    cost=functools.partial(costs.gemm_cost, "binarized_dense"),
+    doc="Conv fallback: Alg.-1 binarized values (±1 [* alpha]) stored "
+        "densely; runs on the ordinary conv path."))
+
+PACKED = register_backend(BackendSpec(
+    name="packed", kinds=("linear",), priority=20, leaf_type=PackedLinear,
+    eligible=_packable,
+    pack=functools.partial(_pack_linear, PackedLinear), apply=_apply_packed,
+    cost=functools.partial(costs.gemm_cost, "packed"),
+    doc="Bitpacked binary weights, full-width activations: the MXU "
+        "binary-matmul engine (repro.kernels)."))
+
+XNOR = register_backend(BackendSpec(
+    name="xnor", kinds=("linear",), priority=30, leaf_type=XnorLinear,
+    eligible=_xnor_eligible,
+    pack=functools.partial(_pack_linear, XnorLinear), apply=_apply_xnor,
+    cost=functools.partial(costs.gemm_cost, "xnor"),
+    doc="Fully-binary FC: binary weights AND sign-packed activations, "
+        "XNOR-popcount dot (repro.xnor)."))
+
+XNOR_CONV = register_backend(BackendSpec(
+    name="xnor_conv", kinds=("conv",), priority=40, leaf_type=XnorConv,
+    eligible=_xnor_conv_eligible, pack=_pack_xnor_conv,
+    apply=_apply_xnor_conv,
+    cost=functools.partial(costs.gemm_cost, "xnor_conv"),
+    doc="Fully-binary conv: packed im2col patches + popcount GEMM "
+        "(repro.xnor.conv)."))

@@ -1,0 +1,378 @@
+"""Execution-plan compiler: per-layer backend assignment as a first-class,
+serializable artifact.
+
+``compile_plan(params, policy, mode)`` walks the parameter tree once, asks
+every registered backend (``repro.engine.registry``) whether it can serve
+each leaf, and records — for *every* leaf — the assigned backend, the
+reason, and the full eligibility map. The resulting :class:`ExecutionPlan`
+
+* packs a parameter tree (``plan.pack(params, key=...)``) into exactly the
+  pytree the legacy ``pack_params`` monolith produced,
+* serializes to a JSON manifest (``save``/``load``) that is golden-checked
+  in CI (``benchmarks/golden_plans``) so dispatch-boundary regressions fail
+  loudly,
+* supports per-layer overrides (``overrides={"conv/3": "binarized_dense"}``
+  — keys match a leaf path exactly or as a '/'-prefix),
+* feeds ``plan_report`` which costs every layer under every eligible
+  backend (one source of truth for benchmarks and the roofline numbers).
+
+Silent fallthroughs are gone: a policy-selected leaf that no binary backend
+can serve (K % 32 != 0, ndim < 2) is assigned ``dense`` with the blocking
+reason recorded in its row, and ``compile_plan`` warns once per compile.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import warnings
+from typing import Any, Mapping, Optional
+
+import jax
+
+from repro.core.binarize import BinarizeMode, _path_str
+from repro.engine import backends as _backends  # noqa: F401  (registers)
+from repro.engine import registry
+
+PLAN_VERSION = 1
+
+@dataclasses.dataclass
+class LayerAssignment:
+    """One plan row: which backend serves the leaf at ``path`` and why."""
+
+    path: str
+    index: int                     # leaf position in tree order (PRNG fold)
+    shape: tuple[int, ...]
+    backend: str
+    reason: str
+    eligible: dict[str, str]       # backend -> "ok" | why-not
+
+    def to_json(self) -> dict:
+        return {"path": self.path, "index": self.index,
+                "shape": list(self.shape), "backend": self.backend,
+                "reason": self.reason, "eligible": dict(self.eligible)}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "LayerAssignment":
+        return cls(path=d["path"], index=int(d["index"]),
+                   shape=tuple(int(s) for s in d["shape"]),
+                   backend=d["backend"], reason=d["reason"],
+                   eligible=dict(d["eligible"]))
+
+
+@dataclasses.dataclass
+class ExecutionPlan:
+    """Explicit per-path backend assignment for one parameter tree."""
+
+    mode: str                      # det | stoch | xnor (engine mode)
+    with_scale: bool
+    layers: list[LayerAssignment]
+    version: int = PLAN_VERSION
+
+    # -- queries ----------------------------------------------------------
+    def __getitem__(self, path: str) -> LayerAssignment:
+        for a in self.layers:
+            if a.path == path:
+                return a
+        raise KeyError(path)
+
+    def assignments(self, backend: str | None = None) -> list[LayerAssignment]:
+        return [a for a in self.layers
+                if backend is None or a.backend == backend]
+
+    def fallthroughs(self) -> list[LayerAssignment]:
+        """Policy-selected leaves that no binary backend could serve."""
+        return [a for a in self.layers if a.reason.startswith("cannot pack")]
+
+    # -- packing ----------------------------------------------------------
+    def pack(self, params, key: Optional[jax.Array] = None):
+        """Applies each row's backend ``pack`` transform to its leaf.
+
+        The tree must match the plan leaf-for-leaf (path and shape); a
+        mismatch raises instead of silently mis-dispatching."""
+        leaves = jax.tree_util.tree_leaves_with_path(params)
+        if len(leaves) != len(self.layers):
+            raise ValueError(
+                f"plan/params mismatch: plan has {len(self.layers)} leaves, "
+                f"params has {len(leaves)}")
+        weight_mode = (BinarizeMode.STOCHASTIC
+                       if BinarizeMode.parse("det" if self.mode == "xnor"
+                                             else self.mode)
+                       is BinarizeMode.STOCHASTIC
+                       else BinarizeMode.DETERMINISTIC)
+        pc = registry.PackContext(weight_mode=weight_mode, key=key,
+                                  with_scale=self.with_scale)
+        out = []
+        for a, (path, leaf) in zip(self.layers, leaves):
+            s = _path_str(path)
+            if s != a.path:
+                raise ValueError(
+                    f"plan/params mismatch at leaf {a.index}: plan has "
+                    f"{a.path!r}, params has {s!r}")
+            if tuple(getattr(leaf, "shape", ())) != a.shape:
+                raise ValueError(
+                    f"plan/params shape mismatch at {a.path!r}: plan has "
+                    f"{a.shape}, params has {tuple(leaf.shape)}")
+            lc = _leaf_context(a, self.mode)
+            out.append(registry.get_backend(a.backend).pack(lc, leaf, pc))
+        treedef = jax.tree_util.tree_structure(params)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    # -- serialization ----------------------------------------------------
+    def to_json(self) -> dict:
+        return {"version": self.version, "mode": self.mode,
+                "with_scale": self.with_scale,
+                "layers": [a.to_json() for a in self.layers]}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "ExecutionPlan":
+        if d.get("version") != PLAN_VERSION:
+            raise ValueError(f"unsupported plan version {d.get('version')!r} "
+                             f"(expected {PLAN_VERSION})")
+        return cls(mode=d["mode"], with_scale=bool(d["with_scale"]),
+                   layers=[LayerAssignment.from_json(a) for a in d["layers"]],
+                   version=int(d["version"]))
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1, sort_keys=True)
+            f.write("\n")
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "ExecutionPlan":
+        with open(path) as f:
+            return cls.from_json(json.load(f))
+
+
+def _leaf_context(a: LayerAssignment, mode: str) -> registry.LeafContext:
+    """Rebuilds the pack-time context from a plan row. The built-in pack
+    transforms only consume path/index/shape (plus the PackContext); the
+    policy facts are re-derived from the recorded *eligibility map* — a
+    backend reports "policy-excluded" iff the weight policy skipped the
+    leaf, and the xnor-kind backend reports "ok" iff the activation policy
+    selected it — so a loaded plan packs identically to a fresh compile."""
+    is_conv = len(a.shape) == 4 and "xnor_conv" in a.eligible
+    policy_probe = a.eligible.get("binarized_dense" if is_conv else "packed",
+                                  "policy-excluded")
+    xnor_probe = a.eligible.get("xnor_conv" if is_conv else "xnor", "")
+    return registry.LeafContext(
+        path=a.path, index=a.index, shape=a.shape, is_conv=is_conv,
+        selected="policy-excluded" not in policy_probe,
+        xnor_selected=xnor_probe == "ok",
+        mode=mode)
+
+
+# ---------------------------------------------------------------------------
+# compilation
+# ---------------------------------------------------------------------------
+
+def _match_override(overrides: Mapping[str, str],
+                    path: str) -> tuple[str, str] | None:
+    """Longest-prefix override lookup: a key matches ``path`` exactly or as
+    a leading '/'-separated prefix (``conv/3`` matches ``conv/3/kernel``).
+    Returns (pattern, backend) or None."""
+    best, best_len = None, -1
+    for pat, backend in overrides.items():
+        if (path == pat or path.startswith(pat + "/")) and len(pat) > best_len:
+            best, best_len = (pat, backend), len(pat)
+    return best
+
+
+def compile_plan(params, policy, mode: str | BinarizeMode = "det", *,
+                 xnor_policy=None, with_scale: bool = True,
+                 overrides: Optional[Mapping[str, str]] = None,
+                 warn: bool = True) -> ExecutionPlan:
+    """Assigns every leaf of ``params`` the highest-priority eligible
+    backend under ``policy``/``mode`` and returns the explicit plan.
+
+    ``mode="xnor"`` enables the fully-binary backends for leaves also
+    selected by ``xnor_policy`` (default ``core.policy.XNOR_POLICY``);
+    weights still binarize deterministically (Eq. 1). ``overrides`` forces
+    named paths (exact or prefix) onto a specific backend — the override
+    must still be eligible, except ``dense`` which is always allowed.
+    """
+    mode_str = mode.value if isinstance(mode, BinarizeMode) else str(mode)
+    if mode_str != "xnor":
+        BinarizeMode.parse(mode_str)  # validate early
+    if xnor_policy is None:
+        from repro.core.policy import XNOR_POLICY as xnor_policy
+    from repro.core.policy import is_conv_kernel, is_xnor_boundary
+
+    rows: list[LayerAssignment] = []
+    override_used = {pat: False for pat in (overrides or ())}
+    xnor = mode_str == "xnor"
+    for i, (path, leaf) in enumerate(
+            jax.tree_util.tree_leaves_with_path(params)):
+        s = _path_str(path)
+        shape = tuple(getattr(leaf, "shape", ()))
+        selected = policy.selects(s)
+        lc = registry.LeafContext(
+            path=s, index=i, shape=shape,
+            is_conv=is_conv_kernel(s) and len(shape) == 4,
+            selected=selected,
+            xnor_selected=bool(xnor and xnor_policy.selects(s)),
+            mode=mode_str, xnor_boundary=is_xnor_boundary(s))
+        kind = "conv" if lc.is_conv else "linear"
+        elig: dict[str, str] = {}
+        chosen = None
+        for spec in registry.backends(kind):
+            ok, why = spec.eligible(lc)
+            elig[spec.name] = "ok" if ok else why
+            if ok and chosen is None:
+                chosen = spec.name
+        reason = _reason(lc, chosen, elig)
+        if reason == "policy-excluded":
+            pat = getattr(policy, "excluded_by", lambda _: None)(s)
+            if pat:
+                reason = f"policy-excluded (pattern {pat!r})"
+        if overrides:
+            hit = _match_override(overrides, s)
+            if hit is not None:
+                pat, forced = hit
+                spec = registry.get_backend(forced)  # raises on unknown name
+                applicable = (kind in spec.kinds
+                              and (forced == "dense"
+                                   or elig.get(forced) == "ok"))
+                if applicable:
+                    override_used[pat] = True
+                    chosen, reason = forced, f"override ({chosen} -> {forced})"
+                elif pat == s:
+                    # exact-path overrides validate strictly; a '/'-prefix
+                    # match (a whole layer dict: kernel + bias + bn) only
+                    # retargets the leaves the backend can actually serve
+                    why = (elig.get(forced) if kind in spec.kinds else
+                           f"backend serves {spec.kinds}, leaf is {kind}")
+                    raise ValueError(
+                        f"override {s!r} -> {forced!r}: ineligible ({why})")
+        rows.append(LayerAssignment(path=s, index=i, shape=shape,
+                                    backend=chosen, reason=reason,
+                                    eligible=elig))
+    unused = [pat for pat, used in override_used.items() if not used]
+    if unused:
+        raise ValueError(
+            f"overrides matched no applicable leaf: {unused} (paths are "
+            f"'/'-joined, e.g. 'conv/3' or 'conv/3/kernel')")
+    plan = ExecutionPlan(mode=mode_str, with_scale=with_scale, layers=rows)
+    if warn:
+        _warn_fallthroughs(plan)
+    return plan
+
+
+def _reason(lc: registry.LeafContext, chosen: str, elig: dict) -> str:
+    """Human-stable explanation for the assignment — in particular, *why* a
+    policy-selected leaf did not land on a better backend."""
+    if not lc.selected:
+        return "policy-excluded"
+    if chosen == "dense":
+        # Selected but nothing binary could serve it: surface the blocker
+        # (the old code fell through here silently).
+        blocker = elig.get("xnor_conv" if lc.is_conv else "packed", "")
+        return f"cannot pack: {blocker}"
+    if chosen == "binarized_dense":
+        return ("no packed-weight conv lowering"
+                if lc.mode != "xnor"
+                else elig.get("xnor_conv", "xnor-policy-excluded"))
+    if chosen == "packed" and lc.mode == "xnor":
+        return elig.get("xnor", "xnor-policy-excluded")
+    return "selected"
+
+
+def _warn_fallthroughs(plan: ExecutionPlan) -> None:
+    bad = plan.fallthroughs()
+    if bad:
+        details = "; ".join(f"{a.path}: {a.reason}" for a in bad[:8])
+        more = "" if len(bad) <= 8 else f" (+{len(bad) - 8} more)"
+        warnings.warn(
+            f"compile_plan: {len(bad)} policy-selected leaves cannot use a "
+            f"binary backend and will serve dense — {details}{more}",
+            UserWarning, stacklevel=3)
+
+
+# ---------------------------------------------------------------------------
+# reporting
+# ---------------------------------------------------------------------------
+
+def _accepts_cost_kwargs(fn) -> bool:
+    """Whether a backend's cost callable takes the optional ``shape``/
+    ``with_scale`` keywords (inspected, not probed, so a TypeError raised
+    *inside* the function is never misread as a signature mismatch)."""
+    import inspect
+
+    try:
+        params = inspect.signature(fn).parameters.values()
+    except (TypeError, ValueError):  # C callables etc.: assume kwargs-able
+        return True
+    return any(p.kind is inspect.Parameter.VAR_KEYWORD
+               or p.name in ("shape", "with_scale") for p in params)
+
+def plan_report(plan: ExecutionPlan, *, batch: int = 8,
+                full: bool = False) -> list[dict]:
+    """Costs every plan row under its assigned backend *and* every eligible
+    alternative. ``batch`` is M, the GEMM rows per application. Note that a
+    conv layer's im2col GEMM has one row per *output position*, so with the
+    default (rows = request batch) the per-row ``costs`` of conv layers are
+    per output position, not per image — pass ``batch * OH * OW`` for
+    spatially-resolved numbers. The static ``weight_bytes`` columns do not
+    depend on ``batch``.
+
+    Returns one dict per row; by default only "interesting" rows (anything
+    not an untouched policy-excluded dense leaf) are included."""
+    from repro.engine import costs as C
+
+    rows = []
+    for a in plan.layers:
+        if (not full and a.backend == "dense"
+                and a.reason.startswith("policy-excluded")):
+            continue
+        if len(a.shape) >= 2:
+            if len(a.shape) == 4:
+                kh, kw, c, n = a.shape
+                k = kh * kw * c
+            else:
+                k, n = a.shape[-2], a.shape[-1]
+        else:
+            k = n = 0
+        cost_by_backend = {}
+        for name, status in a.eligible.items():
+            if status == "ok" and k:
+                fn = registry.get_backend(name).cost
+                if _accepts_cost_kwargs(fn):
+                    cost_by_backend[name] = fn(batch, k, n, shape=a.shape,
+                                               with_scale=plan.with_scale)
+                else:  # custom backend with a bare (m, k, n) fn
+                    cost_by_backend[name] = fn(batch, k, n)
+        conv = len(a.shape) == 4
+        rows.append({
+            "path": a.path, "backend": a.backend, "reason": a.reason,
+            "shape": list(a.shape), "k": k, "n": n,
+            "weight_bytes_dense": C.dense_weight_bytes(a.shape)
+            if a.shape else 0,
+            "weight_bytes": (
+                C.packed_weight_bytes(a.shape, conv=conv,
+                                      with_scale=plan.with_scale)
+                if a.backend in ("packed", "xnor", "xnor_conv")
+                else C.dense_weight_bytes(a.shape) if a.shape else 0),
+            "costs": cost_by_backend,
+        })
+    return rows
+
+
+def format_plan_table(rows: list[dict]) -> str:
+    """Aligned text table: path | backend | K x N | weight bytes (dense ->
+    assigned) | reason."""
+    hdr = ("path", "backend", "KxN", "w-bytes dense->plan", "reason")
+    table = [hdr]
+    for r in rows:
+        ratio = (r["weight_bytes_dense"] / r["weight_bytes"]
+                 if r["weight_bytes"] else 1.0)
+        table.append((
+            r["path"], r["backend"],
+            f"{r['k']}x{r['n']}" if r["k"] else "-",
+            f"{r['weight_bytes_dense']:,} -> {r['weight_bytes']:,} "
+            f"({ratio:.1f}x)",
+            r["reason"]))
+    widths = [max(len(row[i]) for row in table) for i in range(len(hdr))]
+    lines = ["  ".join(c.ljust(w) for c, w in zip(row, widths)).rstrip()
+             for row in table]
+    lines.insert(1, "  ".join("-" * w for w in widths))
+    return "\n".join(lines)

@@ -1,0 +1,141 @@
+"""Layer-backend registry: the single place that knows every datapath.
+
+A *backend* is one way to store and execute a projection/conv leaf at
+serving time (dense MXU matmul, packed-weight binary matmul, XNOR-popcount
+FC, XNOR-popcount conv, binarized-dense conv fallback). Each backend
+registers a :class:`BackendSpec` describing
+
+* ``eligible(ctx)``   — can this leaf run here, and if not, why not,
+* ``pack(ctx, leaf, pack_ctx)`` — transform a master-weight leaf into the
+  backend's serving representation (identity for dense),
+* ``apply(leaf, x, **kw)`` — execute the layer on an input batch,
+* ``cost(m, k, n, **kw)`` — HBM bytes + op count for an (M, K) x (K, N)
+  application (conv is costed at the im2col GEMM level; ``plan_report``
+  also offers ``shape=``/``with_scale=`` kwargs, but a bare (m, k, n)
+  callable is accepted too),
+
+plus the leaf class it produces, which is how ``apply_linear`` /
+``apply_conv2d`` dispatch without isinstance chains: the registry maps
+``(kind, type(leaf)) -> spec`` and falls back to the dense spec for plain
+arrays (including binarized-dense conv kernels, which *are* plain arrays).
+
+``repro.engine.plan.compile_plan`` walks a parameter tree, asks every
+backend for eligibility, and assigns each path the highest-priority
+eligible backend — adding a new datapath is one ``register_backend`` call.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+#: Eligibility result: (ok, reason). ``reason`` is "ok" when eligible,
+#: otherwise a short JSON-stable explanation for the plan report.
+EligibilityFn = Callable[["LeafContext"], tuple[bool, str]]
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafContext:
+    """Static facts about one parameter-tree leaf, as seen by eligibility
+    predicates and pack transforms. Built by ``compile_plan`` (and rebuilt
+    from a serialized plan row, so it must stay JSON-representable)."""
+
+    path: str                 # '/'-joined tree path, e.g. "conv/3/kernel"
+    index: int                # leaf position in tree order (PRNG folding)
+    shape: tuple[int, ...]
+    is_conv: bool             # 4-D conv-stack kernel (policy.is_conv_kernel)
+    selected: bool            # weight policy selects this path
+    xnor_selected: bool       # xnor (activation) policy also selects it
+    mode: str                 # requested engine mode: det | stoch | xnor
+    xnor_boundary: bool = False  # excluded because its input is real-valued
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class PackContext:
+    """Per-``pack`` call arguments shared by all leaves (PRNG key for
+    stochastic binarization, scale storage)."""
+
+    weight_mode: Any          # BinarizeMode for the weight values
+    key: Any = None
+    with_scale: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    name: str
+    kinds: tuple[str, ...]    # apply seams served: ("linear",) / ("conv",)
+    priority: int             # higher wins among eligible backends
+    leaf_type: Optional[type]  # serving leaf class; None = plain array
+    eligible: EligibilityFn
+    pack: Callable[[LeafContext, Any, PackContext], Any]
+    apply: Callable[..., Any]
+    # (m, k, n) -> {"bytes": ..., "ops": ...}; may accept shape=/with_scale=
+    # keywords (plan_report passes them when the signature allows)
+    cost: Callable[..., dict]
+    doc: str = ""
+
+
+_REGISTRY: dict[str, BackendSpec] = {}
+_LEAF_DISPATCH: dict[tuple[str, type], BackendSpec] = {}
+
+
+def register_backend(spec: BackendSpec) -> BackendSpec:
+    """Adds (or replaces) a backend. Returns the spec for chaining."""
+    old = _REGISTRY.get(spec.name)
+    if old is not None:  # drop the replaced spec's leaf-dispatch entries
+        for key in [k for k, v in _LEAF_DISPATCH.items() if v is old]:
+            del _LEAF_DISPATCH[key]
+    _REGISTRY[spec.name] = spec
+    if spec.leaf_type is not None:
+        for kind in spec.kinds:
+            _LEAF_DISPATCH[(kind, spec.leaf_type)] = spec
+    return spec
+
+
+def unregister_backend(name: str) -> None:
+    """Removes a backend and its leaf-dispatch entries (no-op if absent)."""
+    old = _REGISTRY.pop(name, None)
+    if old is not None:
+        for key in [k for k, v in _LEAF_DISPATCH.items() if v is old]:
+            del _LEAF_DISPATCH[key]
+
+
+def get_backend(name: str) -> BackendSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown backend {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def backend_names() -> list[str]:
+    return [s.name for s in backends()]
+
+
+def backends(kind: str | None = None) -> list[BackendSpec]:
+    """All registered backends, highest priority first."""
+    specs = [s for s in _REGISTRY.values()
+             if kind is None or kind in s.kinds]
+    return sorted(specs, key=lambda s: -s.priority)
+
+
+def backend_for_leaf(leaf: Any, kind: str) -> BackendSpec:
+    """Type-based dispatch used by ``apply_linear``/``apply_conv2d``: the
+    leaf class selects its backend; anything unregistered is dense."""
+    spec = _LEAF_DISPATCH.get((kind, type(leaf)))
+    return spec if spec is not None else _REGISTRY["dense"]
+
+
+def apply_linear(w: Any, x: Any) -> Any:
+    """x @ w through whichever backend produced ``w`` (dense fallback)."""
+    return backend_for_leaf(w, "linear").apply(w, x)
+
+
+def apply_conv2d(w: Any, x: Any, *, stride=(1, 1), padding="SAME") -> Any:
+    """conv2d(x, w) through whichever backend produced ``w``."""
+    return backend_for_leaf(w, "conv").apply(w, x, stride=stride,
+                                             padding=padding)

@@ -8,11 +8,17 @@ slot-batched generation; the paper's classifiers (mnist_fc, vgg16_cifar10)
 run fixed-batch image inference — ``--binarize xnor`` serves them fully
 binary (XnorLinear FC + XnorConv blocks 2-5 for VGG).
 
+Per-layer dispatch is compiled into an explicit execution plan
+(``repro.engine``): ``--plan-report`` prints the backend/reason/bytes table,
+``--plan out.json`` dumps the manifest (round-trips through
+``ExecutionPlan.load``), ``--plan-from in.json`` serves a previously saved
+plan, and ``--override path=backend`` forces layers onto a named backend.
+
 Examples:
   PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b --smoke \
       --packed --requests 16 --prompt-len 32 --max-new 16
   PYTHONPATH=src python -m repro.launch.serve --arch vgg16-cifar10 --smoke \
-      --packed --binarize xnor --requests 32 --slots 8
+      --packed --binarize xnor --requests 32 --slots 8 --plan-report
 """
 from __future__ import annotations
 
@@ -24,9 +30,55 @@ import numpy as np
 
 from repro.configs import base as cb
 from repro.core.policy import DEFAULT_POLICY
+from repro.engine import (ExecutionPlan, compile_plan, format_plan_table,
+                          plan_report)
 from repro.models import transformer as T
 from repro.serve.batcher import SlotBatcher
-from repro.serve.engine import ServeEngine, pack_params, packed_param_bytes
+from repro.serve.engine import ServeEngine, packed_param_bytes
+
+
+def wants_plan(args) -> bool:
+    return bool(args.packed or args.plan or args.plan_from
+                or args.plan_report or args.override)
+
+
+def make_plan(params, policy, args) -> ExecutionPlan:
+    """Compile (or load) the execution plan and run the requested plan I/O.
+
+    A loaded plan is authoritative: its recorded mode drives packing and
+    the binary-activation forward, superseding ``--binarize``."""
+    if (args.plan_from or args.override) and not args.packed:
+        raise SystemExit("--plan-from/--override change how weights are "
+                         "packed; add --packed (use --plan/--plan-report "
+                         "alone for a dry inspection)")
+    if args.plan_from:
+        if args.override:
+            raise SystemExit("--override edits a plan at compile time; it "
+                             "cannot be combined with --plan-from")
+        plan = ExecutionPlan.load(args.plan_from)
+        if plan.mode != args.binarize:
+            print(f"plan {args.plan_from} was compiled with mode="
+                  f"{plan.mode}; serving that (--binarize {args.binarize} "
+                  f"ignored)")
+    else:
+        overrides = {}
+        for kv in args.override:
+            if "=" not in kv:
+                raise SystemExit(
+                    f"--override expects PATH=BACKEND (e.g. "
+                    f"conv/3=binarized_dense), got {kv!r}")
+            path, backend = kv.split("=", 1)
+            overrides[path] = backend
+        plan = compile_plan(params, policy, args.binarize,
+                            overrides=overrides or None)
+    if args.plan:
+        print(f"plan manifest -> {plan.save(args.plan)}")
+    if args.plan_report:
+        print(format_plan_table(plan_report(plan, batch=args.slots)))
+    if not args.packed:
+        print("(--packed not set: serving dense master weights; the "
+              "compiled plan is not applied)")
+    return plan
 
 
 def serve_classifier(arch: str, args) -> None:
@@ -48,12 +100,15 @@ def serve_classifier(arch: str, args) -> None:
 
     params, mstate = tree["params"], tree["state"]
     binary_act = False
+    if wants_plan(args):
+        plan = make_plan(params, make_paper_policy(n_fc), args)
     if args.packed:
-        params = pack_params(params, make_paper_policy(n_fc), args.binarize,
-                             key=jax.random.key(args.seed + 1))
+        params = plan.pack(params, key=jax.random.key(args.seed + 1))
         dense_b, packed_b = packed_param_bytes(params)
-        binary_act = args.binarize == "xnor"
-        print(f"packed weights ({args.binarize}): {dense_b/1e6:.1f}MB (bf16 "
+        # the plan's mode (not the CLI flag) decides the sign-activation
+        # forward, so a loaded manifest serves self-consistently
+        binary_act = plan.mode == "xnor"
+        print(f"packed weights ({plan.mode}): {dense_b/1e6:.1f}MB (bf16 "
               f"dense) -> {packed_b/1e6:.1f}MB "
               f"({dense_b/max(packed_b,1):.1f}x smaller)")
 
@@ -84,6 +139,18 @@ def main() -> None:
     ap.add_argument("--packed", action="store_true")
     ap.add_argument("--binarize", default="det",
                     choices=["det", "stoch", "xnor"])
+    ap.add_argument("--plan", default="",
+                    help="dump the compiled execution-plan manifest to this "
+                         "JSON path")
+    ap.add_argument("--plan-from", default="",
+                    help="load (instead of compiling) the execution plan "
+                         "from a saved manifest")
+    ap.add_argument("--plan-report", action="store_true",
+                    help="print the per-layer backend/reason/bytes table")
+    ap.add_argument("--override", action="append", default=[],
+                    metavar="PATH=BACKEND",
+                    help="force a layer (path or '/'-prefix) onto a backend, "
+                         "e.g. conv/3=binarized_dense (repeatable)")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -99,10 +166,10 @@ def main() -> None:
     if cfg.frontend:
         raise SystemExit(f"{arch} uses a stubbed frontend; serve a token arch")
     params = T.init_lm(cfg, jax.random.key(args.seed))
+    if wants_plan(args):
+        plan = make_plan(params, DEFAULT_POLICY, args)
     if args.packed:
-        dense_b, packed_b = 0, 0
-        params = pack_params(params, DEFAULT_POLICY, args.binarize,
-                             key=jax.random.key(args.seed + 1))
+        params = plan.pack(params, key=jax.random.key(args.seed + 1))
         dense_b, packed_b = packed_param_bytes(params)
         print(f"packed weights: {dense_b/1e6:.1f}MB (bf16 dense) -> "
               f"{packed_b/1e6:.1f}MB ({dense_b/max(packed_b,1):.1f}x smaller)")

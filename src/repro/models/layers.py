@@ -4,22 +4,19 @@ embeddings, rotary position embeddings, initializers.
 Models are *binarization-agnostic*: ``train_step`` binarizes the master
 parameter tree (Alg. 1) before calling the forward pass, and the serving path
 may substitute :class:`PackedLinear` leaves (bitpacked binary weights +
-optional per-channel scale) or :class:`XnorLinear` leaves (binary weights
-*and* binary activations, XNOR-popcount dot); ``apply_linear`` dispatches on
-the leaf type so the same model code serves all three. Convolutions get the
-same seam: ``apply_conv2d`` dispatches dense (kh, kw, C, N) kernels to
-``lax.conv_general_dilated`` and :class:`XnorConv` leaves to the binary
-im2col popcount engine in ``repro.xnor.conv``.
+optional per-channel scale), :class:`XnorLinear` / :class:`XnorConv` leaves
+(binary weights *and* binary activations, XNOR-popcount compute), or any
+other serving leaf registered with ``repro.engine``. ``apply_linear`` and
+``apply_conv2d`` dispatch through the backend registry on the leaf type, so
+the same model code serves every datapath — which backend each layer gets is
+decided (and recorded) by ``repro.engine.compile_plan``.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
-
-from repro.core.packing import PACK
 
 
 @jax.tree_util.register_pytree_node_class
@@ -114,20 +111,12 @@ class XnorConv:
 
 
 def apply_linear(w, x: jax.Array, bias: jax.Array | None = None) -> jax.Array:
-    """x @ w (+ bias), where w is dense, a PackedLinear, or an XnorLinear."""
-    if isinstance(w, XnorLinear):
-        from repro.xnor import ops as xops
+    """x @ w (+ bias). The leaf type of ``w`` selects its backend through
+    the ``repro.engine`` registry (dense array, PackedLinear, XnorLinear, or
+    any user-registered serving leaf) — no isinstance chain here."""
+    from repro.engine import registry
 
-        out = xops.xnor_matmul(x, w.packed, w.scale, k=w.k,
-                               out_dtype=jnp.float32)
-        out = out.astype(x.dtype)
-    elif isinstance(w, PackedLinear):
-        from repro.kernels import ops
-
-        out = ops.binary_matmul(x, w.packed, w.scale, out_dtype=jnp.float32)
-        out = out.astype(x.dtype)
-    else:
-        out = jnp.dot(x, w.astype(x.dtype))
+    out = registry.apply_linear(w, x)
     if bias is not None:
         out = out + bias.astype(out.dtype)
     return out
@@ -135,19 +124,12 @@ def apply_linear(w, x: jax.Array, bias: jax.Array | None = None) -> jax.Array:
 
 def apply_conv2d(w, x: jax.Array, bias: jax.Array | None = None, *,
                  stride=(1, 1), padding="SAME") -> jax.Array:
-    """conv2d(x, w) (+ bias) in NHWC/HWIO, where w is a dense (kh, kw, C, N)
-    kernel or an :class:`XnorConv` leaf (XNOR-popcount binary conv)."""
-    if isinstance(w, XnorConv):
-        from repro.xnor.conv import ops as cops
+    """conv2d(x, w) (+ bias) in NHWC/HWIO. The leaf type of ``w`` selects
+    its backend through the ``repro.engine`` registry (dense / binarized-
+    dense kernels, XnorConv, or any user-registered serving leaf)."""
+    from repro.engine import registry
 
-        out = cops.xnor_conv2d(x, w.packed, w.scale, ksize=w.ksize,
-                               c_in=w.c_in, stride=stride, padding=padding,
-                               out_dtype=jnp.float32)
-        out = out.astype(x.dtype)
-    else:
-        out = jax.lax.conv_general_dilated(
-            x, w.astype(x.dtype), window_strides=stride, padding=padding,
-            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    out = registry.apply_conv2d(w, x, stride=stride, padding=padding)
     if bias is not None:
         out = out + bias.astype(out.dtype)
     return out

@@ -6,123 +6,56 @@ The paper's headline inference result (binarized nets cut inference time
 (deterministically, Eq. 1 — the paper also evaluates inference of
 stochastically-trained nets with their master-sign weights) and stored as
 bitpacked int32 (+ optional per-channel scale), so decode — a weight-bytes-
-bound workload — moves ~16x fewer HBM bytes. ``pack_params`` swaps selected
-2-D projection leaves for ``PackedLinear`` nodes; the unchanged model code
-dispatches through ``apply_linear``.
+bound workload — moves ~16x fewer HBM bytes.
+
+Which datapath each layer gets is decided by the execution-plan compiler
+(``repro.engine``): ``pack_params`` is a thin wrapper over
+``compile_plan(...).pack(params)``, and the model code dispatches through
+``apply_linear``/``apply_conv2d`` on the serving leaf types the plan
+produced. Compile the plan yourself to inspect, save, or override the
+per-layer assignment (``launch.serve --plan-report`` prints it).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.binarize import BinarizeMode
-from repro.core.packing import PACK
-from repro.kernels import ops as kops
+from repro.engine import compile_plan
 from repro.models import transformer as T
 from repro.models.layers import PackedLinear, XnorConv, XnorLinear
 
 
 def pack_params(params, policy, mode: str | BinarizeMode = "det",
                 key: Optional[jax.Array] = None, with_scale: bool = True,
-                xnor_policy=None):
+                xnor_policy=None, overrides=None):
     """Binarize+bitpack every policy-selected >=2-D projection leaf.
 
-    Stacked leaves (L, K, N) pack per layer via vmap; the resulting
-    PackedLinear children keep the leading stack dims so ``lax.scan`` slices
-    them exactly like dense leaves. MoE expert tensors (E-stacked) pack the
-    same way. ``with_scale`` stores the per-output-channel mean |w| (BWN
-    alpha) so packed inference tracks the master weights' magnitude.
+    Equivalent to ``repro.engine.compile_plan(...).pack(params, key)`` —
+    kept as the one-call convenience entry point. Stacked leaves (L, K, N)
+    pack per layer via vmap; the resulting PackedLinear children keep the
+    leading stack dims so ``lax.scan`` slices them exactly like dense
+    leaves. MoE expert tensors (E-stacked) pack the same way. ``with_scale``
+    stores the per-output-channel mean |w| (BWN alpha) so packed inference
+    tracks the master weights' magnitude.
 
     ``mode="xnor"`` selects the fully-binary engine: weights binarize
     deterministically (Eq. 1) exactly as ``mode="det"``, but leaves *also*
-    selected by ``xnor_policy`` (default ``core.policy.XNOR_POLICY``) become
-    :class:`XnorLinear` — at apply time their activations are sign-binarized
-    + bitpacked on the fly and the dot runs on the XNOR-popcount kernel.
-    Conv-stack kernels (4-D ``conv/<i>/kernel`` leaves, VGG) become
-    :class:`XnorConv` the same way — binary im2col popcount conv. Under
-    every other mode (and for xnor-excluded conv layers) a policy-selected
-    conv kernel is binarized but stored *densely* (±1 values [* alpha]; the
-    packed-weight MXU path has no conv lowering), so serving still runs the
-    Alg.-1 inference network. For the paper's FC/VGG stacks the default
-    xnor policy keeps
-    the first (real-valued-input) layer — and VGG's first conv block — on
-    the real-valued/PackedLinear path; transformer projections all qualify,
-    since their real-valued front (embedding / lm_head) is excluded from
-    binarization altogether — see ``core.policy.XNOR_POLICY`` for the exact
-    boundary."""
-    xnor = mode == "xnor"
-    if xnor:
-        if xnor_policy is None:
-            from repro.core.policy import XNOR_POLICY as xnor_policy
-        mode = BinarizeMode.DETERMINISTIC
-    mode = BinarizeMode.parse(mode)
-    leaves_with_paths = jax.tree_util.tree_leaves_with_path(params)
-    from repro.core.binarize import _path_str
-    from repro.core.policy import is_conv_kernel
-
-    out = []
-    for i, (path, leaf) in enumerate(leaves_with_paths):
-        s = _path_str(path)
-        if is_conv_kernel(s) and getattr(leaf, "ndim", 0) == 4:
-            if not policy.selects(s):
-                out.append(leaf)
-                continue
-            scale = None
-            if with_scale:
-                scale = jnp.mean(jnp.abs(leaf.astype(jnp.float32)),
-                                 axis=(0, 1, 2))
-            if xnor and xnor_policy.selects(s):
-                from repro.xnor.conv import pack_conv_kernel
-
-                kh, kw, c_in, n_dim = leaf.shape
-                out.append(XnorConv(pack_conv_kernel(leaf), scale,
-                                    (kh, kw), c_in))
-            else:
-                # No packed-weight MXU conv path: serve the Alg.-1 inference
-                # network with densely-stored *binarized* values (±1 [*alpha])
-                # so the weights match what training optimized.
-                from repro.core import binarize as B
-
-                if mode is BinarizeMode.STOCHASTIC:
-                    if key is None:
-                        raise ValueError("stochastic packing requires a key")
-                    wb = B.stochastic_binarize(leaf,
-                                               jax.random.fold_in(key, i))
-                else:
-                    wb = B.deterministic_binarize(leaf)
-                if scale is not None:
-                    wb = (wb.astype(jnp.float32) * scale).astype(leaf.dtype)
-                out.append(wb)
-            continue
-        if (not policy.selects(s) or leaf.ndim < 2
-                or leaf.shape[-2] % PACK != 0):
-            out.append(leaf)
-            continue
-        k_dim, n_dim = leaf.shape[-2], leaf.shape[-1]
-        lead = leaf.shape[:-2]
-        w2 = leaf.reshape((-1, k_dim, n_dim))
-        if mode is BinarizeMode.STOCHASTIC:
-            if key is None:
-                raise ValueError("stochastic packing requires a key")
-            ks = jax.random.split(jax.random.fold_in(key, i), w2.shape[0])
-            packed = jax.vmap(
-                lambda w, kk: kops.binarize_and_pack(w, kk, stochastic=True)
-            )(w2, ks)
-        else:
-            packed = jax.vmap(
-                lambda w: kops.binarize_and_pack(w, stochastic=False))(w2)
-        scale = None
-        if with_scale:
-            scale = jnp.mean(jnp.abs(w2.astype(jnp.float32)), axis=1)  # (-1, N)
-            scale = scale.reshape(lead + (n_dim,))
-        packed = packed.reshape(lead + (k_dim // PACK, n_dim))
-        cls = XnorLinear if (xnor and xnor_policy.selects(s)) else PackedLinear
-        out.append(cls(packed, scale, k_dim))
-    treedef = jax.tree_util.tree_structure(params)
-    return jax.tree_util.tree_unflatten(treedef, out)
+    selected by ``xnor_policy`` (default ``core.policy.XNOR_POLICY``) land
+    on the ``xnor`` / ``xnor_conv`` backends (activations sign-binarized +
+    bitpacked on the fly, XNOR-popcount compute). Policy-selected conv
+    kernels with no binary lowering serve Alg.-1 binarized values stored
+    densely (the ``binarized_dense`` backend); policy-selected projections
+    that cannot bitpack (K % 32 != 0, ndim < 2) serve dense — no longer
+    silently: the compiled plan records the reason per layer and warns.
+    See ``repro.engine`` for the backend registry and
+    ``core.policy.XNOR_POLICY`` for the real-valued-input boundary."""
+    plan = compile_plan(params, policy, mode, xnor_policy=xnor_policy,
+                        with_scale=with_scale, overrides=overrides)
+    return plan.pack(params, key=key)
 
 
 def packed_param_bytes(params) -> tuple[int, int]:
@@ -171,6 +104,11 @@ class ServeEngine:
     def generate(self, prompts: jax.Array, max_new: int,
                  temperature: float = 0.0,
                  key: Optional[jax.Array] = None) -> GenerationResult:
+        if temperature > 0.0 and key is None:
+            raise ValueError(
+                "temperature-sampled generation requires a PRNG key: pass "
+                "key=jax.random.key(...) to generate(), or use "
+                "temperature=0.0 for greedy decoding")
         b, s = prompts.shape[0], prompts.shape[1]
         logits, cache = self._prefill(self.params, prompts, s + max_new)
         toks, lps = [], []

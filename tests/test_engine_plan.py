@@ -1,0 +1,304 @@
+"""Execution-plan compiler: registry dispatch, plan round-trips, parity with
+pack_params, overrides, fallthrough surfacing, golden manifests."""
+import json
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base as cb
+from repro.core.policy import DEFAULT_POLICY
+from repro.engine import (ExecutionPlan, backends, compile_plan,
+                          format_plan_table, get_backend, plan_report,
+                          registry)
+from repro.models import mnist_fc, transformer as T, vgg
+from repro.models.layers import (PackedLinear, XnorConv, XnorLinear,
+                                 apply_conv2d, apply_linear)
+from repro.serve.engine import pack_params
+
+
+def _trees():
+    """(name, params, policy) fixtures: the paper nets + a stacked
+    transformer (scan-stacked (L, K, N) projection leaves)."""
+    fc = mnist_fc.init(jax.random.key(0), hidden=(128, 64))["params"]
+    cnn = vgg.init(jax.random.key(1), width_mult=0.125)["params"]
+    cfg = cb.get_config("starcoder2_3b", smoke=True)
+    lm = T.init_lm(cfg, jax.random.key(2))
+    return [("mnist_fc", fc, DEFAULT_POLICY),
+            ("vgg16_cifar10", cnn, DEFAULT_POLICY),
+            ("stacked_transformer", lm, DEFAULT_POLICY)]
+
+
+def assert_trees_identical(a, b):
+    """Same pytree structure (incl. serving-leaf classes + static aux) and
+    bit-identical array values."""
+    assert jax.tree_util.tree_structure(a) == jax.tree_util.tree_structure(b)
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+class TestPackParity:
+    @pytest.mark.parametrize("mode", ["det", "stoch", "xnor"])
+    def test_plan_pack_equals_pack_params(self, mode):
+        """Acceptance: pack_params output is pytree-identical (structure +
+        values) to compile_plan(...).pack(params), per model and mode."""
+        key = jax.random.key(7) if mode == "stoch" else None
+        for name, params, policy in _trees():
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")
+                plan = compile_plan(params, policy, mode, warn=False)
+                via_plan = plan.pack(params, key=key)
+                via_wrapper = pack_params(params, policy, mode, key=key)
+            assert_trees_identical(via_plan, via_wrapper)
+
+    @pytest.mark.parametrize("mode", ["det", "stoch", "xnor"])
+    def test_serialize_load_pack_roundtrip(self, mode, tmp_path):
+        """compile -> save -> load -> pack: leaf-for-leaf identical dispatch
+        and bit-identical values vs the in-memory plan."""
+        key = jax.random.key(3) if mode == "stoch" else None
+        for name, params, policy in _trees():
+            plan = compile_plan(params, policy, mode, warn=False)
+            path = os.path.join(tmp_path, f"{name}_{mode}.json")
+            plan.save(path)
+            loaded = ExecutionPlan.load(path)
+            assert loaded.to_json() == plan.to_json()
+            assert [a.backend for a in loaded.layers] == \
+                   [a.backend for a in plan.layers]
+            assert_trees_identical(loaded.pack(params, key=key),
+                                   plan.pack(params, key=key))
+
+    def test_forward_outputs_bit_identical(self):
+        """Packed trees from plan vs wrapper produce bit-identical logits."""
+        tree = mnist_fc.init(jax.random.key(0), hidden=(128, 64))
+        plan = compile_plan(tree["params"], DEFAULT_POLICY, "xnor", warn=False)
+        a = plan.pack(tree["params"])
+        b = pack_params(tree["params"], DEFAULT_POLICY, "xnor")
+        x = jax.random.normal(jax.random.key(5), (4, 784))
+        la, _ = mnist_fc.apply(a, tree["state"], x, training=False,
+                               binary_act=True)
+        lb, _ = mnist_fc.apply(b, tree["state"], x, training=False,
+                               binary_act=True)
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+    def test_pack_rejects_mismatched_tree(self):
+        fc = mnist_fc.init(jax.random.key(0), hidden=(128, 64))["params"]
+        other = mnist_fc.init(jax.random.key(0), hidden=(64, 64))["params"]
+        plan = compile_plan(fc, DEFAULT_POLICY, "det", warn=False)
+        with pytest.raises(ValueError, match="mismatch"):
+            plan.pack(other)
+
+
+class TestCompile:
+    def test_fallthrough_recorded_and_warned(self):
+        """Satellite: a policy-selected leaf that cannot bitpack (784 % 32
+        != 0) is assigned dense with the reason recorded — and warns,
+        instead of the old silent fallthrough."""
+        fc = mnist_fc.init(jax.random.key(0), hidden=(128, 64))["params"]
+        with pytest.warns(UserWarning, match="cannot use a binary backend"):
+            plan = compile_plan(fc, DEFAULT_POLICY, "xnor")
+        row = plan["layers/0/kernel"]
+        assert row.backend == "dense"
+        assert "K=784 % 32 != 0" in row.reason
+        assert plan.fallthroughs() == [row]
+        # the plan report surfaces the row (it is not filtered as boring)
+        assert any(r["path"] == "layers/0/kernel" and "784" in r["reason"]
+                   for r in plan_report(plan))
+
+    def test_xnor_boundary_reason(self):
+        """VGG block 1 stays off the binary-activation path with the
+        real-valued-input boundary named as the reason."""
+        cnn = vgg.init(jax.random.key(1), width_mult=0.125)["params"]
+        plan = compile_plan(cnn, DEFAULT_POLICY, "xnor", warn=False)
+        row = plan["conv/1/kernel"]
+        assert row.backend == "binarized_dense"
+        assert "real-valued-input boundary" in row.reason
+        assert all(plan[f"conv/{i}/kernel"].backend == "xnor_conv"
+                   for i in range(2, 13))
+
+    def test_every_leaf_has_assignment(self):
+        fc = mnist_fc.init(jax.random.key(0), hidden=(128, 64))["params"]
+        plan = compile_plan(fc, DEFAULT_POLICY, "det", warn=False)
+        n_leaves = len(jax.tree_util.tree_leaves(fc))
+        assert len(plan.layers) == n_leaves
+        assert [a.index for a in plan.layers] == list(range(n_leaves))
+        for a in plan.layers:
+            assert a.backend in a.eligible and a.eligible[a.backend] == "ok"
+
+    def test_overrides_force_and_validate(self):
+        cnn = vgg.init(jax.random.key(1), width_mult=0.125)["params"]
+        plan = compile_plan(cnn, DEFAULT_POLICY, "xnor", warn=False,
+                            overrides={"conv/3": "binarized_dense",
+                                       "fc/1/kernel": "packed"})
+        assert plan["conv/3/kernel"].backend == "binarized_dense"
+        assert plan["conv/3/kernel"].reason.startswith("override")
+        assert plan["fc/1/kernel"].backend == "packed"
+        assert plan["conv/4/kernel"].backend == "xnor_conv"  # untouched
+        packed = plan.pack(cnn)
+        assert isinstance(packed["conv"][3]["kernel"], jax.Array)
+        assert isinstance(packed["conv"][4]["kernel"], XnorConv)
+        # ineligible override: a conv leaf cannot take the FC xnor backend
+        with pytest.raises(ValueError, match="override"):
+            compile_plan(cnn, DEFAULT_POLICY, "xnor", warn=False,
+                         overrides={"conv/3/kernel": "xnor"})
+        # policy-excluded leaf cannot be forced onto a binary backend
+        with pytest.raises(ValueError, match="ineligible"):
+            compile_plan(cnn, DEFAULT_POLICY, "det", warn=False,
+                         overrides={"conv/0/bias": "packed"})
+
+    def test_unknown_mode_and_backend(self):
+        fc = mnist_fc.init(jax.random.key(0), hidden=(128, 64))["params"]
+        with pytest.raises(ValueError, match="mode"):
+            compile_plan(fc, DEFAULT_POLICY, "int5", warn=False)
+        with pytest.raises(KeyError, match="unknown backend"):
+            compile_plan(fc, DEFAULT_POLICY, "det", warn=False,
+                         overrides={"layers/1/kernel": "int5"})
+
+
+class TestRegistryDispatch:
+    def test_backend_order_and_lookup(self):
+        names = [s.name for s in backends()]
+        assert names == ["xnor_conv", "xnor", "packed", "binarized_dense",
+                         "dense"]
+        assert get_backend("packed").leaf_type is PackedLinear
+
+    def test_leaf_type_dispatch(self):
+        assert registry.backend_for_leaf(jnp.ones((4, 4)), "linear").name \
+            == "dense"
+        pl = PackedLinear(jnp.zeros((2, 8), jnp.int32), None, 64)
+        assert registry.backend_for_leaf(pl, "linear").name == "packed"
+        xl = XnorLinear(jnp.zeros((2, 8), jnp.int32), None, 64)
+        assert registry.backend_for_leaf(xl, "linear").name == "xnor"
+        xc = XnorConv(jnp.zeros((9, 8), jnp.int32), None, (3, 3), 16)
+        assert registry.backend_for_leaf(xc, "conv").name == "xnor_conv"
+
+    def test_apply_linear_via_registry(self):
+        from repro.kernels import ops as kops
+
+        w = jax.random.normal(jax.random.key(0), (64, 32))
+        x = jax.random.normal(jax.random.key(1), (4, 64))
+        got = apply_linear(XnorLinear(kops.binarize_and_pack(w), None, 64), x)
+        want = jnp.where(x > 0, 1.0, -1.0) @ jnp.where(w > 0, 1.0, -1.0)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6)
+
+    def test_custom_backend_registration(self):
+        """Backend N+1 is a registration, not a cross-cutting edit: a new
+        leaf type dispatches through apply_linear with no layers.py change."""
+        import dataclasses as dc
+
+        @jax.tree_util.register_pytree_node_class
+        @dc.dataclass
+        class NegatedLinear:
+            w: jax.Array
+
+            def tree_flatten(self):
+                return (self.w,), ()
+
+            @classmethod
+            def tree_unflatten(cls, aux, children):
+                return cls(children[0])
+
+        spec = registry.BackendSpec(
+            name="negated", kinds=("linear",), priority=1,
+            leaf_type=NegatedLinear,
+            eligible=lambda lc: (False, "test-only"),
+            pack=lambda lc, leaf, pc: NegatedLinear(-leaf),
+            apply=lambda w, x: -jnp.dot(x, w.w), cost=lambda m, k, n: {})
+        registry.register_backend(spec)
+        try:
+            x = jnp.ones((2, 4))
+            w = jnp.ones((4, 3))
+            out = apply_linear(NegatedLinear(w), x)
+            np.testing.assert_allclose(np.asarray(out), -4.0 * np.ones((2, 3)))
+        finally:
+            registry.unregister_backend("negated")
+        assert registry.backend_for_leaf(NegatedLinear(w), "linear").name \
+            == "dense"
+
+    def test_apply_conv2d_dense_via_registry(self):
+        w = jax.random.normal(jax.random.key(0), (3, 3, 4, 8))
+        x = jax.random.normal(jax.random.key(1), (2, 5, 5, 4))
+        got = apply_conv2d(w, x)
+        want = jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-6)
+
+
+class TestReport:
+    def test_costs_every_eligible_backend(self):
+        cnn = vgg.init(jax.random.key(1), width_mult=0.125)["params"]
+        plan = compile_plan(cnn, DEFAULT_POLICY, "xnor", warn=False)
+        rows = plan_report(plan, batch=16)
+        by_path = {r["path"]: r for r in rows}
+        conv_row = by_path["conv/2/kernel"]
+        assert set(conv_row["costs"]) == {"xnor_conv", "binarized_dense",
+                                          "dense"}
+        for c in conv_row["costs"].values():
+            assert c["bytes"] > 0 and c["ops"] > 0
+        assert conv_row["costs"]["xnor_conv"]["bytes"] < \
+            conv_row["costs"]["dense"]["bytes"]
+        table = format_plan_table(rows)
+        assert "xnor_conv" in table and "conv/2/kernel" in table
+
+    def test_conv_cost_uses_per_tap_word_layout(self):
+        """The xnor_conv cost must count kh*kw*ceil(C/32) per-tap words
+        (the layout the kernel stores), not the flat ceil(kh*kw*C/32) —
+        they differ whenever C % 32 != 0 (smoke VGG: C=16)."""
+        cnn = vgg.init(jax.random.key(1), width_mult=0.125)["params"]
+        plan = compile_plan(cnn, DEFAULT_POLICY, "xnor", warn=False)
+        row = [r for r in plan_report(plan, batch=16)
+               if r["path"] == "conv/2/kernel"][0]
+        kh, kw, c, n = row["shape"]
+        assert c % 32 != 0  # the case where the layouts differ
+        words = kh * kw * ((c + 31) // 32)
+        # weight_bytes column and the cost model's weight component agree
+        assert row["weight_bytes"] == words * n * 4 + n * 4  # + f32 scale
+        cost = row["costs"]["xnor_conv"]
+        assert cost["bytes"] == (words * n * 4 + n * 4     # packed w + scale
+                                 + 16 * words * 4          # packed patches
+                                 + 16 * n * 4)             # f32 out
+        assert cost["ops"] == 2 * 16 * words * n
+
+    def test_report_hides_boring_rows_by_default(self):
+        fc = mnist_fc.init(jax.random.key(0), hidden=(128, 64))["params"]
+        plan = compile_plan(fc, DEFAULT_POLICY, "det", warn=False)
+        assert all("bias" not in r["path"] for r in plan_report(plan))
+        full = plan_report(plan, full=True)
+        assert len(full) == len(plan.layers)
+
+
+class TestGoldenManifests:
+    def test_committed_goldens_match_compiled(self):
+        """Mirror of the CI gate: the committed golden manifests equal a
+        fresh compile (dispatch-boundary regressions fail here too)."""
+        from benchmarks.check_golden_plans import GOLDEN_DIR, compiled_plans
+
+        plans = compiled_plans()
+        assert len(plans) == 4
+        for name, got in plans.items():
+            path = os.path.join(GOLDEN_DIR, f"{name}.json")
+            assert os.path.exists(path), f"golden manifest missing: {name}"
+            with open(path) as f:
+                assert json.load(f) == got, f"golden mismatch: {name}"
+
+
+class TestGenerateValidation:
+    def test_temperature_without_key_raises(self):
+        """Satellite: clear error instead of failing inside
+        jax.random.split(None) deep in the decode loop."""
+        from repro.serve.engine import ServeEngine
+
+        cfg = cb.get_config("starcoder2_3b", smoke=True)
+        params = T.init_lm(cfg, jax.random.key(0))
+        engine = ServeEngine(cfg, params)
+        prompts = jnp.zeros((1, 4), jnp.int32)
+        with pytest.raises(ValueError, match="PRNG key"):
+            engine.generate(prompts, max_new=2, temperature=0.7)
+        out = engine.generate(prompts, max_new=2, temperature=0.7,
+                              key=jax.random.key(1))
+        assert out.tokens.shape == (1, 2)
