@@ -19,7 +19,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig23_curves, kernel_bench, plan_bench,
-                            roofline_report, table1, xnor_bench,
+                            roofline_report, serve_bench, table1, xnor_bench,
                             xnor_conv_bench)
     suites = {
         "table1": table1.main,
@@ -29,6 +29,7 @@ def main() -> None:
         "xnor": xnor_bench.main,
         "xnor_conv": xnor_conv_bench.main,
         "plans": plan_bench.main,
+        "serve": serve_bench.main,
     }
     selected = (args.only.split(",") if args.only else list(suites))
     print("name,us_per_call,derived")

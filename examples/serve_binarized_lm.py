@@ -1,6 +1,8 @@
-"""End-to-end serving driver: batched requests through the slot batcher
+"""End-to-end serving driver: step-level continuously batched requests
 against a binarized, bitpacked starcoder2-family model (smoke size), the
-TPU analogue of the paper's inference-time experiment.
+TPU analogue of the paper's inference-time experiment. Requests stream
+through a persistent slot-addressed KV cache — a finished request's slot is
+re-prefilled from the queue on the next decode step.
 
   PYTHONPATH=src python examples/serve_binarized_lm.py
 """
@@ -17,25 +19,25 @@ from repro.configs import base as cb
 from repro.core.policy import DEFAULT_POLICY
 from repro.models import transformer as T
 from repro.serve.batcher import SlotBatcher
-from repro.serve.engine import ServeEngine, pack_params, packed_param_bytes
+from repro.serve.engine import (ServeEngine, pack_params, packed_param_bytes,
+                                stream_serve)
 
 
 def serve(params, cfg, tag, requests=8, slots=4, prompt_len=16, max_new=8):
     engine = ServeEngine(cfg, params)
     batcher = SlotBatcher(slots, prompt_len)
     rng = np.random.default_rng(0)
-    for _ in range(requests):
-        batcher.submit(rng.integers(0, cfg.vocab_size, prompt_len), max_new)
+    for i in range(requests):
+        # mixed per-request budgets: short requests free their slot for the
+        # queue mid-stream (per-step refill, no round barrier)
+        batcher.submit(rng.integers(0, cfg.vocab_size, prompt_len),
+                       max_new if i % 2 == 0 else max(1, max_new // 4))
     t0 = time.perf_counter()
-    while not batcher.idle:
-        batcher.refill()
-        out = engine.generate(jax.numpy.asarray(batcher.prompts()), max_new)
-        for step_tok in np.asarray(out.tokens).T:
-            batcher.record(step_tok)
-    batcher.refill()
+    steps = stream_serve(engine, batcher, max_new_cap=max_new)
     dt = time.perf_counter() - t0
-    print(f"{tag:>14s}: {len(batcher.completed)} requests, "
-          f"{dt:.2f}s total, {dt/requests*1e3:.0f} ms/req")
+    toks = batcher.tokens_generated
+    print(f"{tag:>14s}: {len(batcher.completed)} requests, {toks} tokens in "
+          f"{steps} steps, {dt:.2f}s total ({toks/dt:.0f} tok/s)")
     return dt
 
 

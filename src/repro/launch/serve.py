@@ -2,11 +2,14 @@
 
 Demonstrates the paper's inference claim end-to-end: the same model served
 with dense master weights vs bitpacked binary weights (+BWN scale), with
-per-request latency stats and the weight-bytes reduction printed (the TPU
-analogue of Table I's inference-time rows). Token archs run continuous
-slot-batched generation; the paper's classifiers (mnist_fc, vgg16_cifar10)
-run fixed-batch image inference — ``--binarize xnor`` serves them fully
-binary (XnorLinear FC + XnorConv blocks 2-5 for VGG).
+per-request TTFT/latency stats and the weight-bytes reduction printed (the
+TPU analogue of Table I's inference-time rows). Token archs run *step-level
+continuous batching* (``serve.engine.stream_serve``): a persistent
+slot-addressed KV cache, per-step slot refill, per-request ``max_new``, and
+tok/s derived from tokens actually recorded. The paper's classifiers
+(mnist_fc, vgg16_cifar10) run fixed-batch image inference — ``--binarize
+xnor`` serves them fully binary (XnorLinear FC + XnorConv blocks 2-5 for
+VGG).
 
 Per-layer dispatch is compiled into an explicit execution plan
 (``repro.engine``): ``--plan-report`` prints the backend/reason/bytes table,
@@ -34,7 +37,7 @@ from repro.engine import (ExecutionPlan, compile_plan, format_plan_table,
                           plan_report)
 from repro.models import transformer as T
 from repro.serve.batcher import SlotBatcher
-from repro.serve.engine import ServeEngine, packed_param_bytes
+from repro.serve.engine import ServeEngine, packed_param_bytes, stream_serve
 
 
 def wants_plan(args) -> bool:
@@ -154,7 +157,12 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16,
+                    help="per-request max_new cap (the decode cache is "
+                         "sized for prompt_len + max_new positions)")
+    ap.add_argument("--max-new-skew", type=int, default=0,
+                    help="randomize each request's max_new down by up to "
+                         "this many tokens (exercises per-step slot refill)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -177,28 +185,24 @@ def main() -> None:
     engine = ServeEngine(cfg, params)
     batcher = SlotBatcher(args.slots, args.prompt_len)
     rng = np.random.default_rng(args.seed)
-    for _ in range(args.requests):
+    for i in range(args.requests):
+        # per-request max_new: uniform in [max(1, max_new - skew), max_new]
+        m = args.max_new - int(rng.integers(0, args.max_new_skew + 1))
         batcher.submit(rng.integers(0, cfg.vocab_size, args.prompt_len),
-                       args.max_new)
+                       max(1, m))
 
     t0 = time.perf_counter()
-    n_tokens = 0
-    rounds = 0
-    while not batcher.idle:
-        batcher.refill()
-        prompts = jax.numpy.asarray(batcher.prompts())
-        result = engine.generate(prompts, args.max_new)
-        toks = np.asarray(result.tokens)
-        for step_tok in toks.T:
-            batcher.record(step_tok)
-        n_tokens += int(batcher.active_mask().sum()) * args.max_new
-        rounds += 1
-    batcher.refill()  # collect the final round's completions
+    steps = stream_serve(engine, batcher, max_new_cap=args.max_new)
     dt = time.perf_counter() - t0
-    done = len(batcher.completed)
-    print(f"served {done} requests in {rounds} rounds, {dt:.2f}s "
-          f"({dt/max(done,1)*1e3:.1f} ms/request, "
-          f"{args.max_new*done/dt:.1f} tok/s)")
+    done = batcher.completed
+    # throughput from tokens actually recorded — never steps * batch, which
+    # over-credits requests whose max_new is below the cap
+    n_tokens = batcher.tokens_generated
+    ttft = np.median([r.ttft for r in done]) if done else float("nan")
+    lat = np.median([r.latency for r in done]) if done else float("nan")
+    print(f"served {len(done)} requests in {steps} decode steps, {dt:.2f}s "
+          f"({n_tokens} tokens, {n_tokens/dt:.1f} tok/s; median TTFT "
+          f"{ttft*1e3:.1f} ms, median latency {lat*1e3:.1f} ms)")
 
 
 if __name__ == "__main__":

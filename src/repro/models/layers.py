@@ -41,6 +41,13 @@ class PackedLinear:
         return (self.k, self.packed.shape[-1])
 
     @property
+    def master_shape(self):
+        """True master-weight shape incl. leading stack dims (L/E, K, N) —
+        the dense-baseline shape for byte accounting, independent of any
+        pad words the packed layout carries."""
+        return tuple(self.packed.shape[:-2]) + (self.k, self.packed.shape[-1])
+
+    @property
     def ndim(self):
         return 2
 
@@ -68,6 +75,14 @@ class XnorLinear:
     @property
     def shape(self):
         return (self.k, self.packed.shape[-1])
+
+    @property
+    def master_shape(self):
+        """True master-weight shape incl. leading stack dims (see
+        :class:`PackedLinear`). The packed array may legally hold more
+        words than ceil(K/32) (self-cancelling pad layouts); this never
+        reflects them."""
+        return tuple(self.packed.shape[:-2]) + (self.k, self.packed.shape[-1])
 
     @property
     def ndim(self):
@@ -104,6 +119,13 @@ class XnorConv:
     @property
     def shape(self):
         return (*self.ksize, self.c_in, self.packed.shape[-1])
+
+    @property
+    def master_shape(self):
+        """True (kh, kw, C, N) master shape. The packed words cover
+        kh*kw*ceil(C/32)*32 >= kh*kw*C positions (per-tap channel padding);
+        dense-baseline accounting must use the true C recorded here."""
+        return self.shape
 
     @property
     def ndim(self):

@@ -257,6 +257,45 @@ def init_cache(cfg, batch: int, context_len: int, dtype=None) -> dict:
     return cache
 
 
+def cache_slot_axes(cfg) -> dict[str, int]:
+    """Slot (batch) axis of every decode-cache entry for this family.
+
+    The decode cache is a long-lived, slot-addressed structure under
+    continuous batching: each request owns one index along these axes for
+    its lifetime, and ``cache_insert`` splices a freshly prefilled request
+    in without touching the other slots."""
+    if cfg.family == "ssm":
+        return {"pos": 0, "ssm": 1, "conv": 1}
+    if cfg.is_hybrid:
+        return {"pos": 0, "k": 1, "v": 1, "ssm": 2, "conv": 2}
+    return {"pos": 0, "k": 1, "v": 1}
+
+
+def cache_insert(cfg, cache: dict, one: dict, slot) -> dict:
+    """Insert a batch-1 cache ``one`` into ``cache`` at slot index ``slot``.
+
+    ``one`` must come from a prefill with the same ``max_len`` (so the
+    context axes already agree); ``slot`` may be a traced int32 scalar —
+    all shapes are static, so a jitted caller never re-specializes on the
+    slot index. Returns the updated cache (other slots untouched)."""
+    axes = cache_slot_axes(cfg)
+    if set(axes) != set(cache):
+        raise ValueError(
+            f"cache_slot_axes is out of sync with the cache layout: axes "
+            f"cover {sorted(axes)}, cache has {sorted(cache)} — an entry "
+            f"left out would silently keep the slot's previous occupant")
+    out = dict(cache)
+    for name, axis in axes.items():
+        upd = one[name].astype(cache[name].dtype)
+        if upd.shape[axis] != 1:
+            raise ValueError(
+                f"cache_insert expects a batch-1 cache; {name!r} has "
+                f"{upd.shape[axis]} slots on axis {axis}")
+        out[name] = jax.lax.dynamic_update_slice_in_dim(
+            cache[name], upd, slot, axis=axis)
+    return out
+
+
 def decode_step(cfg, params, cache: dict, tokens_or_embeds, sh=None):
     """One decode step for the whole batch -> (logits, new_cache).
 

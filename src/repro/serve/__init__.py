@@ -1,0 +1,27 @@
+"""Serving layer: step-level continuous batching over packed binary weights.
+
+Module map:
+
+* ``engine``  — :class:`ServeEngine` (jitted prefill / decode_step /
+  prefill_into over one parameter tree), :class:`DecodeState` (the
+  persistent slot-addressed KV cache + per-slot next-token logits),
+  :func:`stream_serve` (the step-level serving loop), ``pack_params`` and
+  ``packed_param_bytes`` (weight-bytes accounting from true master shapes);
+* ``batcher`` — :class:`SlotBatcher` / :class:`Request`: fixed-slot request
+  queue with suffix truncation to the static prompt width, per-request
+  ``max_new``, and the TTFT / latency / tokens-recorded ledger the
+  throughput numbers are derived from.
+
+The decode cache is long-lived and slot-addressed (``models.transformer.
+cache_insert``): requests join and leave mid-stream while every jitted
+shape stays fixed, so the decode step compiles once per (n_slots,
+context_len) and never re-specializes.
+"""
+from repro.serve.batcher import Request, SlotBatcher
+from repro.serve.engine import (DecodeState, GenerationResult, ServeEngine,
+                                pack_params, packed_param_bytes, stream_serve)
+
+__all__ = [
+    "DecodeState", "GenerationResult", "Request", "ServeEngine",
+    "SlotBatcher", "pack_params", "packed_param_bytes", "stream_serve",
+]

@@ -7,13 +7,19 @@ number of *slots* (the compiled batch dimension). Finished slots are refilled
 from the queue each step; empty slots decode padding and are masked out of
 the returned streams. This is the standard continuous-batching scheme (vLLM
 et al.) restricted to a static shape, which is what pjit wants.
+
+The batcher is also the accounting ledger: every request records submit /
+first-token / completion wall times (TTFT and per-request latency) and its
+generated tokens, so serving throughput is derived from tokens *actually
+recorded* (``tokens_generated``), never from steps-times-batch arithmetic.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import itertools
-from typing import Deque, Iterable, Optional
+import time
+from typing import Deque, Optional
 
 import numpy as np
 
@@ -24,10 +30,24 @@ class Request:
     prompt: np.ndarray            # (S,) int32
     max_new: int
     generated: list[int] = dataclasses.field(default_factory=list)
+    truncated: bool = False       # prompt was longer than the slot width
+    t_submit: float = 0.0         # wall time at submit()
+    t_first: Optional[float] = None   # wall time of the first recorded token
+    t_done: Optional[float] = None    # wall time of the last recorded token
 
     @property
     def done(self) -> bool:
         return len(self.generated) >= self.max_new
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Submit-to-first-token seconds (includes queue wait)."""
+        return None if self.t_first is None else self.t_first - self.t_submit
+
+    @property
+    def latency(self) -> Optional[float]:
+        """Submit-to-last-token seconds (includes queue wait)."""
+        return None if self.t_done is None else self.t_done - self.t_submit
 
 
 class SlotBatcher:
@@ -42,11 +62,18 @@ class SlotBatcher:
 
     def submit(self, prompt: np.ndarray, max_new: int) -> int:
         uid = next(self._uid)
-        p = np.asarray(prompt, np.int32)[: self.prompt_len]
-        if p.shape[0] < self.prompt_len:  # left-pad to static shape
+        p = np.asarray(prompt, np.int32)
+        truncated = p.shape[0] > self.prompt_len
+        if truncated:
+            # keep the LAST prompt_len tokens: the next token conditions on
+            # the suffix, so dropping the head loses far less context than
+            # dropping the tail would
+            p = p[-self.prompt_len:]
+        elif p.shape[0] < self.prompt_len:  # left-pad to static shape
             p = np.concatenate(
                 [np.full(self.prompt_len - p.shape[0], self.pad_id, np.int32), p])
-        self.queue.append(Request(uid, p, max_new))
+        self.queue.append(Request(uid, p, max_new, truncated=truncated,
+                                  t_submit=time.perf_counter()))
         return uid
 
     def refill(self) -> list[int]:
@@ -72,9 +99,23 @@ class SlotBatcher:
         return out
 
     def record(self, tokens: np.ndarray) -> None:
+        now = time.perf_counter()
         for i, r in enumerate(self.slots):
             if r is not None and not r.done:
+                if r.t_first is None:
+                    r.t_first = now
                 r.generated.append(int(tokens[i]))
+                if r.done:
+                    r.t_done = now
+
+    @property
+    def tokens_generated(self) -> int:
+        """Tokens actually recorded so far (completed + in-flight). The
+        serving loops derive tok/s from this — counting steps * batch over-
+        credits requests whose per-request ``max_new`` is below the cap and
+        misses slots that finished inside the current round/step."""
+        live = sum(len(r.generated) for r in self.slots if r is not None)
+        return live + sum(len(r.generated) for r in self.completed)
 
     @property
     def idle(self) -> bool:

@@ -14,6 +14,14 @@ Which datapath each layer gets is decided by the execution-plan compiler
 ``apply_linear``/``apply_conv2d`` on the serving leaf types the plan
 produced. Compile the plan yourself to inspect, save, or override the
 per-layer assignment (``launch.serve --plan-report`` prints it).
+
+Serving is *step-level continuously batched* (:func:`stream_serve`): the
+KV cache is a persistent, slot-addressed structure (``DecodeState``), a
+finished request's slot is re-prefilled from the queue mid-stream
+(``ServeEngine.prefill_into``), and one fixed-shape jitted ``decode_step``
+advances all slots each step — sustained streaming throughput rather than
+round-based batch latency, which is where the binarized datapaths' byte
+savings actually pay off (cf. FINN, arXiv:1612.07119).
 """
 from __future__ import annotations
 
@@ -22,6 +30,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.binarize import BinarizeMode
 from repro.engine import compile_plan
@@ -59,14 +68,23 @@ def pack_params(params, policy, mode: str | BinarizeMode = "det",
 
 
 def packed_param_bytes(params) -> tuple[int, int]:
-    """(dense bf16 bytes, packed bytes) over policy-packed leaves."""
+    """(dense bf16 bytes, packed bytes) over policy-packed leaves.
+
+    The dense baseline is derived from each serving leaf's recorded
+    *master-weight* shape (``leaf.master_shape``, stack dims included) —
+    never from the packed array's word counts, which over-state K whenever
+    a layout carries self-cancelling pad words (the xnor conv engine's
+    per-tap channel padding, or any future padded layout). The packed side
+    counts the int32 words actually stored (pad words are real bytes)."""
     dense = packed = 0
     packed_types = (PackedLinear, XnorLinear, XnorConv)
     for leaf in jax.tree_util.tree_leaves(
             params, is_leaf=lambda x: isinstance(x, packed_types)):
         if isinstance(leaf, packed_types):
-            dense += leaf.k * leaf.packed.shape[-1] * 2 * max(
-                1, int(jnp.prod(jnp.array(leaf.packed.shape[:-2]))))
+            n_master = 1
+            for d in leaf.master_shape:
+                n_master *= d
+            dense += n_master * 2
             packed += leaf.packed.size * 4
             if leaf.scale is not None:
                 packed += leaf.scale.size * 4
@@ -82,14 +100,50 @@ def packed_param_bytes(params) -> tuple[int, int]:
 
 @dataclasses.dataclass
 class GenerationResult:
+    """Logprob convention: ``logprobs[b, i]`` is the log-probability of
+    ``tokens[b, i]`` under the distribution the token was actually drawn
+    from — ``softmax(logits / temperature)`` when sampling, ``softmax(
+    logits)`` for greedy decoding (temperature 0). Tempered logprobs are
+    therefore comparable across tokens of one generation but not across
+    runs at different temperatures."""
+
     tokens: jax.Array          # (B, max_new)
     logprobs: jax.Array        # (B, max_new)
     steps: int
 
 
+@dataclasses.dataclass
+class DecodeState:
+    """Live state of the step-level continuous-batching engine: one
+    long-lived, slot-addressed KV cache plus the next-token logits of every
+    slot. Requests come and go (``prefill_into``); the state's shapes never
+    change, so the jitted decode step never re-specializes."""
+
+    cache: dict                # slot-addressed decode cache (B = n_slots)
+    logits: jax.Array          # (n_slots, vocab) next-token logits per slot
+    n_slots: int
+    prompt_len: int
+    max_new_cap: int           # per-request max_new must be <= this
+
+    @property
+    def context_len(self) -> int:
+        return self.prompt_len + self.max_new_cap
+
+
 class ServeEngine:
     """Batched prefill + greedy/temperature decode over a (possibly packed)
-    parameter tree."""
+    parameter tree.
+
+    Two serving modes share the same jitted model functions:
+
+    * one-shot: ``generate(prompts, max_new)`` — prefill a batch, decode
+      every row for ``max_new`` steps (the tier-1 parity oracle);
+    * step-level continuous batching: ``init_decode`` builds a persistent
+      slot-addressed :class:`DecodeState`, ``prefill_into`` splices a fresh
+      request into a live cache at a slot index, and ``decode_step``
+      advances *all* slots one token with a single fixed-shape jitted call.
+      ``stream_serve`` drives the loop against a ``SlotBatcher``.
+    """
 
     def __init__(self, cfg, params, sh=None):
         self.cfg = cfg
@@ -100,6 +154,14 @@ class ServeEngine:
             static_argnums=2)
         self._decode = jax.jit(
             lambda p, cache, tok: T.decode_step(cfg, p, cache, tok, sh))
+
+        def _prefill_into(p, cache, logits, prompt, slot, ml):
+            lg, one = T.prefill(cfg, p, prompt, sh, max_len=ml)
+            return (jax.lax.dynamic_update_slice_in_dim(
+                        logits, lg.astype(logits.dtype), slot, axis=0),
+                    T.cache_insert(cfg, cache, one, slot))
+
+        self._prefill_into = jax.jit(_prefill_into, static_argnums=5)
 
     def generate(self, prompts: jax.Array, max_new: int,
                  temperature: float = 0.0,
@@ -116,12 +178,104 @@ class ServeEngine:
         for i in range(max_new):
             if temperature > 0.0:
                 key, sub = jax.random.split(key)
-                tok = jax.random.categorical(sub, logits / temperature, axis=-1)
+                sample_logits = logits.astype(jnp.float32) / temperature
+                tok = jax.random.categorical(sub, sample_logits, axis=-1)
             else:
+                sample_logits = logits.astype(jnp.float32)
                 tok = jnp.argmax(logits, axis=-1)
-            lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            # logprob under the *sampled* (tempered) distribution — see
+            # GenerationResult for the convention
+            lp = jax.nn.log_softmax(sample_logits, axis=-1)
             lps.append(jnp.take_along_axis(lp, tok[:, None], axis=-1)[:, 0])
             toks.append(tok)
             if i < max_new - 1:
                 logits, cache = self._decode(self.params, cache, tok[:, None])
         return GenerationResult(jnp.stack(toks, 1), jnp.stack(lps, 1), max_new)
+
+    # -- step-level continuous batching -----------------------------------
+
+    def init_decode(self, n_slots: int, prompt_len: int,
+                    max_new_cap: int) -> DecodeState:
+        """Allocate the persistent decode state: a zeroed slot-addressed
+        cache sized for ``prompt_len + max_new_cap`` context positions and
+        an empty next-token logits buffer. Slots fill via ``prefill_into``;
+        empty slots decode padding and are masked out by the caller."""
+        ctx = prompt_len + max_new_cap
+        cache = T.init_cache(self.cfg, n_slots, ctx)
+        logits = jnp.zeros((n_slots, self.cfg.vocab_size),
+                           self.cfg.activation_dtype)
+        return DecodeState(cache, logits, n_slots, prompt_len, max_new_cap)
+
+    def prefill_into(self, state: DecodeState, slot: int,
+                     prompt) -> DecodeState:
+        """Prefill one request (prompt of static length ``prompt_len``) and
+        splice its cache + first-token logits into the live state at slot
+        index ``slot``. One compiled program serves every slot (the index
+        is a traced scalar; all shapes are static)."""
+        prompt = jnp.asarray(prompt, jnp.int32).reshape(1, state.prompt_len)
+        logits, cache = self._prefill_into(
+            self.params, state.cache, state.logits, prompt,
+            jnp.int32(slot), state.context_len)
+        return dataclasses.replace(state, cache=cache, logits=logits)
+
+    def decode_step(self, state: DecodeState, tokens) -> DecodeState:
+        """Advance every slot one token (single fixed-shape jitted call).
+        ``tokens``: (n_slots,) int32 — the token just emitted per slot;
+        inactive slots feed padding and their outputs are ignored."""
+        tokens = jnp.asarray(tokens, jnp.int32).reshape(state.n_slots, 1)
+        logits, cache = self._decode(self.params, state.cache, tokens)
+        return dataclasses.replace(state, cache=cache, logits=logits)
+
+
+def stream_serve(engine: ServeEngine, batcher, *,
+                 max_new_cap: Optional[int] = None,
+                 temperature: float = 0.0,
+                 key: Optional[jax.Array] = None) -> int:
+    """Step-level continuous-batching serving loop.
+
+    Each iteration: retire finished requests and re-prefill their slots
+    from the queue (``batcher.refill``), emit one token for every active
+    slot from the state's next-token logits, then run one masked decode
+    step over all slots. A request finishing mid-stream frees its slot for
+    the next queued request on the *next step* — no round barrier, and
+    per-request ``max_new`` is honored exactly (``batcher.record`` stops
+    appending at each request's own limit).
+
+    ``max_new_cap`` sizes the persistent cache (default: the max over the
+    currently queued requests); submitting a request with a larger
+    ``max_new`` later raises. Returns the number of batched token-emission
+    steps (the final emission needs no trailing decode_step, so the model
+    runs ``steps - 1`` decode steps plus one prefill per request).
+    """
+    if temperature > 0.0 and key is None:
+        raise ValueError("temperature-sampled serving requires a PRNG key")
+    cap = max_new_cap
+    if cap is None:
+        pending = [r.max_new for r in batcher.queue]
+        if not pending:
+            return 0
+        cap = max(pending)
+    state = engine.init_decode(batcher.n_slots, batcher.prompt_len, cap)
+    steps = 0
+    while True:
+        for slot in batcher.refill():
+            req = batcher.slots[slot]
+            if req.max_new > cap:
+                raise ValueError(
+                    f"request {req.uid} wants max_new={req.max_new} but the "
+                    f"decode state was sized for max_new_cap={cap}")
+            state = engine.prefill_into(state, slot, req.prompt)
+        if batcher.idle:
+            return steps
+        if temperature > 0.0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(
+                sub, state.logits.astype(jnp.float32) / temperature, axis=-1)
+        else:
+            tok = jnp.argmax(state.logits, axis=-1)
+        batcher.record(np.asarray(tok))
+        steps += 1
+        if batcher.idle:
+            batcher.refill()   # flush the final completions; the trailing
+            return steps       # decode_step would be pure waste
+        state = engine.decode_step(state, tok)

@@ -1,5 +1,5 @@
 """Serving path: packed-weight inference equivalence, engine generation,
-slot batcher invariants."""
+step-level continuous batching parity, slot batcher invariants."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,9 +9,10 @@ from repro.configs import base as cb
 from repro.core import binarize as B
 from repro.core.policy import DEFAULT_POLICY
 from repro.models import transformer as T
-from repro.models.layers import PackedLinear, apply_linear
+from repro.models.layers import PackedLinear, XnorConv, XnorLinear, apply_linear
 from repro.serve.batcher import SlotBatcher
-from repro.serve.engine import ServeEngine, pack_params, packed_param_bytes
+from repro.serve.engine import (ServeEngine, pack_params, packed_param_bytes,
+                                stream_serve)
 
 
 class TestPackParams:
@@ -91,6 +92,188 @@ class TestServeEngine:
             seq = jnp.concatenate([seq, nxt[:, None]], axis=1)
 
 
+class TestContinuousDecode:
+    """Step-level continuous batching: the persistent slot-addressed cache
+    must reproduce one-shot generation bit-for-bit."""
+
+    @pytest.mark.parametrize("arch", ["starcoder2_3b", "mamba2_130m",
+                                      "jamba_1_5_large"])
+    def test_prefill_into_matches_batched_prefill(self, arch):
+        """init_decode + per-slot prefill_into builds exactly the cache (and
+        first-token logits) a batched prefill would, for every cache family
+        (uniform attn / ssm / hybrid)."""
+        cfg = cb.get_config(arch, smoke=True)
+        params = T.init_lm(cfg, jax.random.key(0))
+        engine = ServeEngine(cfg, params)
+        prompts = jax.random.randint(jax.random.key(1), (3, 8), 0,
+                                     cfg.vocab_size)
+        lg, cache = engine._prefill(params, prompts, 8 + 4)
+        state = engine.init_decode(3, 8, 4)
+        for s in (2, 0, 1):  # out of order: slot index is data, not shape
+            state = engine.prefill_into(state, s, np.asarray(prompts[s]))
+        np.testing.assert_array_equal(np.asarray(lg, np.float32),
+                                      np.asarray(state.logits, np.float32))
+        for k in cache:
+            np.testing.assert_array_equal(
+                np.asarray(cache[k], np.float32),
+                np.asarray(state.cache[k], np.float32), err_msg=k)
+
+    @pytest.mark.parametrize("arch", ["starcoder2_3b", "mamba2_130m"])
+    def test_greedy_stream_bit_identical_to_one_shot(self, arch):
+        """Greedy streams from the step-level loop == one-shot generate per
+        request, through mid-stream slot refill (5 requests, 2 slots) and
+        mixed per-request max_new."""
+        cfg = cb.get_config(arch, smoke=True)
+        params = T.init_lm(cfg, jax.random.key(0))
+        engine = ServeEngine(cfg, params)
+        rng = np.random.default_rng(0)
+        max_news = [3, 5, 2, 4, 3]
+        prompts = [rng.integers(0, cfg.vocab_size, 8) for _ in max_news]
+        batcher = SlotBatcher(n_slots=2, prompt_len=8)
+        for p, m in zip(prompts, max_news):
+            batcher.submit(p, m)
+        steps = stream_serve(engine, batcher)
+        assert len(batcher.completed) == 5 and batcher.idle
+        # this workload packs perfectly onto 2 slots (3+2+4 | 5+3), so the
+        # scheduler must hit exactly ceil(sum/slots) emission steps — any
+        # wasted or duplicated step breaks the equality
+        assert steps == -(-sum(max_news) // 2)
+        by_uid = {r.uid: r for r in batcher.completed}
+        for uid, (p, m) in enumerate(zip(prompts, max_news)):
+            assert len(by_uid[uid].generated) == m
+            one = engine.generate(jnp.asarray(p, jnp.int32)[None], m)
+            np.testing.assert_array_equal(
+                np.asarray(by_uid[uid].generated),
+                np.asarray(one.tokens)[0], err_msg=f"request {uid}")
+
+    def test_request_timing_ledger(self):
+        cfg = cb.get_config("starcoder2_3b", smoke=True)
+        params = T.init_lm(cfg, jax.random.key(0))
+        engine = ServeEngine(cfg, params)
+        batcher = SlotBatcher(n_slots=2, prompt_len=4)
+        rng = np.random.default_rng(0)
+        for _ in range(3):
+            batcher.submit(rng.integers(0, cfg.vocab_size, 4), 2)
+        stream_serve(engine, batcher)
+        for r in batcher.completed:
+            assert r.ttft is not None and r.ttft >= 0
+            assert r.latency is not None and r.latency >= r.ttft
+
+    def test_oversized_max_new_raises(self):
+        cfg = cb.get_config("starcoder2_3b", smoke=True)
+        params = T.init_lm(cfg, jax.random.key(0))
+        engine = ServeEngine(cfg, params)
+        batcher = SlotBatcher(n_slots=1, prompt_len=4)
+        batcher.submit(np.arange(4), max_new=9)
+        with pytest.raises(ValueError, match="max_new_cap"):
+            stream_serve(engine, batcher, max_new_cap=4)
+
+
+class TestServingAccounting:
+    def test_tokens_generated_counts_recorded_tokens(self):
+        """Regression for the round-loop counter bug: tok/s must come from
+        tokens actually recorded — per-request max_new below the cap used
+        to be over-credited (mask * global max_new), and slots completing
+        within the round were dropped (mask read *after* record)."""
+        b = SlotBatcher(n_slots=2, prompt_len=2)
+        max_news = [1, 3, 2]
+        for i, m in enumerate(max_news):
+            b.submit(np.full(2, i), max_new=m)
+        cap, legacy_count = 3, 0
+        while not b.idle:
+            b.refill()
+            for _ in range(cap):          # the old round-based recording
+                b.record(np.arange(2))
+            legacy_count += int(b.active_mask().sum()) * cap
+        b.refill()
+        assert b.tokens_generated == sum(max_news) == 6
+        assert sum(len(r.generated) for r in b.completed) == 6
+        # the legacy formula reads the mask after the round completed every
+        # slot, so it credits 0 — any steps-times-mask arithmetic is wrong
+        assert legacy_count != b.tokens_generated
+
+    def test_tokens_generated_includes_in_flight(self):
+        b = SlotBatcher(n_slots=1, prompt_len=2)
+        b.submit(np.zeros(2), max_new=4)
+        b.refill()
+        b.record(np.zeros(1))
+        assert b.tokens_generated == 1  # mid-stream, not yet completed
+
+
+class TestPackedParamBytes:
+    def test_dense_baseline_is_true_master_bytes(self):
+        """The dense side of the bytes report must equal the bf16 size of
+        the *master* tree — K-padded packed layouts (xnor conv's per-tap
+        channel padding when C % 32 != 0) must not inflate it."""
+        from repro.launch.train import make_paper_policy
+        from repro.models import vgg
+        tree = vgg.init(jax.random.key(0), width_mult=0.125)
+        params = tree["params"]
+        assert params["conv"][1]["kernel"].shape[2] % 32 != 0  # K-padded
+        packed = pack_params(params, make_paper_policy(len(params["fc"])),
+                             "xnor")
+        dense_b, packed_b = packed_param_bytes(packed)
+        true_dense = sum(leaf.size * 2
+                         for leaf in jax.tree_util.tree_leaves(params))
+        assert dense_b == true_dense
+        assert packed_b < dense_b
+
+    def test_padded_word_layout_reports_master_shape(self):
+        """A leaf whose packed array carries extra self-cancelling pad words
+        (legal for per-tap layouts) still reports true-K dense bytes."""
+        k, n, extra = 64, 8, 3
+        packed = jnp.zeros((k // 32 + extra, n), jnp.int32)
+        leaf = XnorLinear(packed, None, k)
+        assert leaf.master_shape == (k, n)
+        dense_b, packed_b = packed_param_bytes({"w": leaf})
+        assert dense_b == k * n * 2                 # true master, no pad
+        assert packed_b == packed.size * 4          # stored words, with pad
+
+    def test_stacked_master_shape(self):
+        pl = PackedLinear(jnp.zeros((5, 2, 64, 7), jnp.int32), None, 64)
+        assert pl.master_shape == (5, 2, 64, 7)
+        xc = XnorConv(jnp.zeros((9, 4), jnp.int32), None, (3, 3), 20)
+        assert xc.master_shape == (3, 3, 20, 4)
+
+
+class TestTemperedLogprobs:
+    def test_logprobs_under_sampled_distribution(self):
+        """With temperature > 0, reported logprobs are under the tempered
+        softmax(logits / T) the token was drawn from (teacher-forced
+        recompute through the full forward pass)."""
+        cfg = cb.get_config("starcoder2_3b", smoke=True)
+        params = T.init_lm(cfg, jax.random.key(0))
+        engine = ServeEngine(cfg, params)
+        prompts = jax.random.randint(jax.random.key(1), (2, 6), 0,
+                                     cfg.vocab_size)
+        temp = 0.7
+        out = engine.generate(prompts, max_new=3, temperature=temp,
+                              key=jax.random.key(2))
+        seq = prompts
+        for i in range(3):
+            logits, _ = T.forward(cfg, params, seq)
+            lp = jax.nn.log_softmax(
+                logits[:, -1].astype(jnp.float32) / temp, axis=-1)
+            want = jnp.take_along_axis(lp, out.tokens[:, i][:, None],
+                                       axis=-1)[:, 0]
+            np.testing.assert_allclose(np.asarray(out.logprobs[:, i]),
+                                       np.asarray(want), rtol=2e-3, atol=2e-3)
+            seq = jnp.concatenate([seq, out.tokens[:, i][:, None]], axis=1)
+
+    def test_greedy_logprobs_untempered(self):
+        cfg = cb.get_config("starcoder2_3b", smoke=True)
+        params = T.init_lm(cfg, jax.random.key(0))
+        engine = ServeEngine(cfg, params)
+        prompts = jax.random.randint(jax.random.key(1), (1, 6), 0,
+                                     cfg.vocab_size)
+        out = engine.generate(prompts, max_new=1)
+        logits, _ = T.forward(cfg, params, prompts)
+        lp = jax.nn.log_softmax(logits[:, -1].astype(jnp.float32), axis=-1)
+        want = jnp.take_along_axis(lp, out.tokens[:, 0][:, None], axis=-1)[:, 0]
+        np.testing.assert_allclose(np.asarray(out.logprobs[:, 0]),
+                                   np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
 class TestSlotBatcher:
     def test_fills_and_completes(self):
         b = SlotBatcher(n_slots=2, prompt_len=4)
@@ -113,6 +296,17 @@ class TestSlotBatcher:
         b.refill()
         np.testing.assert_array_equal(b.prompts()[0],
                                       np.array([9, 9, 9, 9, 1, 2]))
+        assert not b.slots[0].truncated
+
+    def test_truncates_long_prompts_to_suffix(self):
+        """A prompt longer than the slot width keeps its LAST prompt_len
+        tokens (what the next token conditions on), not the first, and the
+        request records that it was truncated."""
+        b = SlotBatcher(n_slots=1, prompt_len=4)
+        b.submit(np.arange(10), max_new=1)
+        b.refill()
+        np.testing.assert_array_equal(b.prompts()[0], np.array([6, 7, 8, 9]))
+        assert b.slots[0].truncated
 
     def test_refill_retires_and_reuses_slot_in_one_step(self):
         """A slot finishing while the queue is non-empty is retired AND
