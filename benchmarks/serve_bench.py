@@ -14,13 +14,22 @@ measures:
 * tokens/s across slot counts (the compiled batch dimension);
 * burst vs staggered arrival (requests joining mid-stream through
   ``prefill_into`` — no round barrier to wait for);
-* dense vs packed vs xnor execution plans under the step-level loop.
+* dense vs packed vs xnor execution plans under the step-level loop;
+* mesh-sharded vs single-device serving (tensor-parallel execution plans
+  on a forced 2x2 ("data", "model") CPU mesh, run in a subprocess so this
+  process keeps its device count) — on CPU this is a *parity* row (same
+  tokens, placement overhead visible), on real multi-chip hardware it is
+  the scale-out row.
 
 All throughput numbers divide tokens *actually recorded* by wall time
 (``SlotBatcher.tokens_generated``), never steps-times-batch arithmetic.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -118,6 +127,70 @@ def _staggered_loop(engine, cfg, slots: int, n: int, cap: int,
     return time.perf_counter() - t0, steps, batcher.tokens_generated
 
 
+def _sharded_child(modes: list[str], n: int, cap: int, slots: int) -> dict:
+    """Runs inside the forced-multi-device subprocess: serve the same
+    workload through a single-device engine and a 2x2 mesh-sharded engine
+    per plan mode; returns tok/s for both (greedy tokens must agree)."""
+    from repro.configs import base as cb
+    from repro.core.policy import DEFAULT_POLICY
+    from repro.engine import compile_plan
+    from repro.models import transformer as T
+    from repro.serve.engine import ServeEngine
+
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    cfg = cb.get_config(ARCH, smoke=True)
+    params = T.init_lm(cfg, jax.random.key(0))
+    out = {}
+    for mode in modes:
+        plan = compile_plan(params, DEFAULT_POLICY, mode, warn=False,
+                            mesh=mesh)
+        packed = plan.pack(params, key=jax.random.key(1))
+        engines = {"single": ServeEngine(cfg, packed),
+                   "sharded": ServeEngine(cfg, packed, mesh=mesh, plan=plan)}
+        tokens = {}
+        for name, eng in engines.items():
+            b = _fresh_batcher(cfg, slots)          # warmup/compile
+            _submit_skewed(b, cfg, slots, cap, slots, 0)
+            _run_step_loop(eng, b, cap)
+            b = _fresh_batcher(cfg, slots)
+            _submit_skewed(b, cfg, n, cap, n, 0)
+            dt, steps, toks = _run_step_loop(eng, b, cap)
+            out[f"{mode}_{name}"] = {"s": dt, "tokens": toks,
+                                     "tok_s": toks / dt}
+            tokens[name] = {r.uid: list(r.generated) for r in b.completed}
+        out[f"{mode}_identical"] = tokens["single"] == tokens["sharded"]
+    return out
+
+
+def _sharded_compare(modes: list[str], n: int, cap: int,
+                     slots: int) -> dict | None:
+    """Sharded-vs-single comparison, in a subprocess with 4 forced host
+    devices (device count is fixed at backend init, so the parent process
+    cannot grow one). Returns None if the child fails (e.g. no subprocess
+    support on the platform) — the suite keeps going."""
+    code = (f"import benchmarks.serve_bench as sb, json; "
+            f"print('RESULT ' + json.dumps(sb._sharded_child("
+            f"{modes!r}, {n}, {cap}, {slots})))")
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               JAX_PLATFORMS="cpu")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), os.pardir, "src"),
+         os.path.join(os.path.dirname(__file__), os.pardir),
+         env.get("PYTHONPATH", "")])
+    try:
+        proc = subprocess.run([sys.executable, "-c", code], env=env,
+                              capture_output=True, text=True, timeout=540)
+    except (OSError, subprocess.TimeoutExpired):
+        return None
+    for line in reversed(proc.stdout.splitlines()):
+        if line.startswith("RESULT "):
+            return json.loads(line[len("RESULT "):])
+    print(f"sharded-compare child failed:\n{proc.stderr[-1500:]}",
+          file=sys.stderr)
+    return None
+
+
 def main(fast: bool = False):
     slots = 8
     cap = 16 if fast else 32
@@ -193,6 +266,22 @@ def main(fast: bool = False):
         rows.append(csv_row(f"serve/plan_{plan}_slots{slots}",
                             dt / max(steps, 1) * 1e6,
                             f"tok/s={toks / dt:.1f}"))
+
+    # -- mesh-sharded vs single-device (tensor-parallel plans) ------------
+    sh_modes = ["det"] if fast else ["det", "xnor"]
+    sh_n, sh_cap, sh_slots = (6, 6, 2) if fast else (8, 8, 4)
+    sharded = _sharded_compare(sh_modes, sh_n, sh_cap, sh_slots)
+    if sharded is not None:
+        record["sharded"] = sharded
+        for mode in sh_modes:
+            single = sharded[f"{mode}_single"]["tok_s"]
+            tp = sharded[f"{mode}_sharded"]["tok_s"]
+            same = sharded[f"{mode}_identical"]
+            rows.append(csv_row(
+                f"serve/sharded_vs_single_{mode}", 0.0,
+                f"single={single:.1f} sharded={tp:.1f} tok/s "
+                f"ratio={tp / single:.2f}x identical={same} "
+                f"(2x2 CPU mesh: parity row, not a speedup claim)"))
 
     save_json("serve_bench", record)
     return rows

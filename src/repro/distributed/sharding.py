@@ -18,10 +18,16 @@ Conventions (single-pod mesh ("data", "model"), multi-pod ("pod", "data",
   (flash-decoding-style sharded attention; XLA inserts the softmax combine)
 * params               -> TP dim over "model"; with FSDP also shard the
   largest replicated dim over "data" (ZeRO-3)
+* packed serving leaves (PackedLinear / XnorLinear / XnorConv)
+                       -> out-channel (N) dim over "model"; the bitpacked
+  int32 word dim (K // 32) is NEVER sharded, so a 32-bit lane group never
+  splits across devices. ``place_packed_params`` applies these rules (or a
+  compiled ExecutionPlan's recorded sharding column) to a serving tree.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import re
 from typing import Optional
 
@@ -98,7 +104,9 @@ class ShardCtx:
 # Parameter PartitionSpecs, generated from tree paths by pattern rules.
 # ---------------------------------------------------------------------------
 
-# (path regex, spec builder given ndim). Later rules win.
+# (path regex, spec builder given ndim). Later rules win. Cached: the
+# 13-entry closure table is built once per (fsdp, dp_axes), not per leaf.
+@functools.lru_cache(maxsize=None)
 def _pspec_rules(fsdp: bool, dp_axes=("data",)):
     dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
 
@@ -130,26 +138,35 @@ def _pspec_rules(fsdp: bool, dp_axes=("data",)):
     ]
 
 
+def leaf_pspec(path: str, ndim: int, fsdp: bool = False,
+               dp_axes=("data",)) -> P:
+    """Megatron-style PartitionSpec for one *master-weight* leaf, resolved
+    from its '/'-joined tree path (later rules win). This is the single
+    source of the dense sharding rules: ``params_pspecs`` maps it over a
+    tree, and the execution-plan compiler records it per plan row for every
+    leaf a binary backend does not claim."""
+    rules = _pspec_rules(bool(fsdp), tuple(dp_axes))
+    chosen = P()
+    for pat, build in rules:
+        if pat.fullmatch(path):
+            chosen = build(ndim) if ndim else P()
+    # sanity: spec rank must not exceed leaf rank
+    if len(chosen) > ndim:
+        chosen = P(*list(chosen)[:ndim])
+    return chosen
+
+
 def params_pspecs(params, fsdp: bool = False, dp_axes=("data",)):
     """PartitionSpec tree matching ``params`` by path patterns.
 
     ``dp_axes``: the data-parallel mesh axes FSDP shards over — on the
     multi-pod mesh this must include "pod" (32-way ZeRO-3, not 16)."""
-    rules = _pspec_rules(fsdp, dp_axes)
 
     def spec_for(path, leaf):
         from repro.core.binarize import _path_str
 
-        s = _path_str(path)
-        ndim = getattr(leaf, "ndim", 0)
-        chosen = P()
-        for pat, build in rules:
-            if pat.fullmatch(s):
-                chosen = build(ndim) if ndim else P()
-        # sanity: spec rank must not exceed leaf rank
-        if len(chosen) > ndim:
-            chosen = P(*list(chosen)[:ndim])
-        return chosen
+        return leaf_pspec(_path_str(path), getattr(leaf, "ndim", 0),
+                          fsdp=fsdp, dp_axes=dp_axes)
 
     return jax.tree_util.tree_map_with_path(spec_for, params)
 
@@ -160,6 +177,173 @@ def shardings_from_pspecs(mesh: Mesh, pspecs):
         pspecs,
         is_leaf=lambda x: isinstance(x, P),
     )
+
+
+# ---------------------------------------------------------------------------
+# Serving-tree placement: put a packed parameter tree on a mesh, following
+# the sharding column of a compiled ExecutionPlan (repro.engine.plan).
+# ---------------------------------------------------------------------------
+
+def spec_to_json(spec) -> list:
+    """``PartitionSpec`` -> JSON-stable list (entries: None | str | [str..]).
+    Inverse of :func:`spec_from_json`."""
+    return [list(e) if isinstance(e, (tuple, list)) else e for e in spec]
+
+
+def spec_from_json(entries) -> P:
+    return P(*[tuple(e) if isinstance(e, list) else e for e in entries])
+
+
+def _serving_leaf_types():
+    from repro.engine import registry
+
+    return registry.serving_leaf_types()
+
+
+def serving_leaf_pspec(path: str, leaf) -> P:
+    """PartitionSpec for one *serving-tree* leaf (plan-free fallback).
+
+    Consults the backend registry, so user-registered backends behave like
+    the built-ins: a serving leaf whose backend declares a ``tp_dim``
+    shards that master dim over "model" (for the bitpacked built-ins, the
+    out-channel / N dim — never the word (K//32) dim, so a 32-bit lane
+    group is never split across devices). Plain arrays, and serving leaves
+    whose backend declares no ``tp_dim``, follow the Megatron path rules
+    (:func:`leaf_pspec`)."""
+    from repro.engine import registry
+
+    from repro.core.policy import is_conv_kernel
+
+    spec = registry.spec_for_serving_leaf(leaf)
+    tp_dim = spec.tp_dim if spec is not None else None
+    if tp_dim is None and is_conv_kernel(path) and \
+            getattr(leaf, "ndim", 0) == 4:
+        # conv-stack kernels stay plain arrays under the binarized_dense
+        # backend (and dense), so the registry cannot identify them by
+        # type; TP-shard the out-channel dim like compile_plan records for
+        # binarized_dense (a valid conv sharding for dense masters too)
+        tp_dim = -1
+    if tp_dim is not None:
+        shape = getattr(leaf, "master_shape", getattr(leaf, "shape", ()))
+        spec = tp_spec(tp_dim, len(shape))
+        if spec is not None:
+            return spec
+    return leaf_pspec(path, getattr(leaf, "ndim", 0))
+
+
+def _adapt_spec(spec: P, ndim: int) -> P:
+    """Fit a master-shape spec onto an array of rank ``ndim`` by keeping the
+    TRAILING entries (serving layouts collapse *leading* master dims: an
+    XnorConv packs (kh, kw, C, N) into 2-D (words, N), stacked linears keep
+    their lead dims). The out-channel dim is last in every layout, so the
+    trailing alignment preserves the TP assignment exactly."""
+    entries = list(spec)
+    if len(entries) > ndim:
+        entries = entries[len(entries) - ndim:]
+    return P(*entries)
+
+
+def _place_serving_node(mesh: Mesh, spec: P, node, types=None):
+    """device_put one plan row's serving node (packed leaf or plain array)
+    under its master-shape spec, rank-adapting to each stored array."""
+    def put(a):
+        if a is None or not hasattr(a, "ndim"):
+            return a
+        s = _adapt_spec(spec, a.ndim)
+        return jax.device_put(a, NamedSharding(mesh, s))
+
+    if isinstance(node, types if types is not None
+                  else _serving_leaf_types()):
+        # generic over any registered pytree node class: place each stored
+        # array, keep the node's static aux data
+        kids, treedef = jax.tree_util.tree_flatten(node)
+        return jax.tree_util.tree_unflatten(
+            treedef, [put(a) for a in kids])
+    return put(node)
+
+
+def place_packed_params(mesh: Mesh, params, plan=None):
+    """Place a (possibly packed) parameter tree on ``mesh``.
+
+    With ``plan`` (a compiled :class:`repro.engine.ExecutionPlan`), each
+    leaf follows its plan row's recorded sharding column; without one (or
+    for v1-manifest rows), specs are re-derived from leaf types and paths
+    (:func:`serving_leaf_pspec`) — equivalent for every typed serving leaf,
+    while plain-array 4-D conv kernels uniformly TP-shard the out-channel
+    dim (the ``binarized_dense`` rule; a dense-backend conv row's recorded
+    column may instead be replicated — both placements are correct, the
+    plan's is authoritative when given). Packed int32 weight words are always
+    sharded on the out-channel dim over "model" (never splitting a 32-bit
+    lane group); per-channel scales follow their N dim; dense leaves follow
+    the Megatron rules. Axes named in a spec but absent from ``mesh`` are
+    dropped (a "model"-annotated plan placed on a data-only mesh simply
+    replicates those dims)."""
+    from repro.core.binarize import _path_str
+
+    types = _serving_leaf_types()                 # one registry walk, not
+    is_leaf = lambda x: isinstance(x, types)      # noqa: E731 — per node
+    nodes = jax.tree_util.tree_leaves_with_path(params, is_leaf=is_leaf)
+    row_spec = {}
+    if plan is not None:
+        if len(plan.layers) != len(nodes):
+            raise ValueError(
+                f"plan/params mismatch: plan has {len(plan.layers)} rows, "
+                f"tree has {len(nodes)} leaves")
+        row_spec = {a.path: a.pspec for a in plan.layers}
+    out = []
+    for path, node in nodes:
+        s = _path_str(path)
+        if plan is not None and s not in row_spec:
+            raise ValueError(
+                f"plan/params mismatch: tree leaf {s!r} has no plan row "
+                f"(the plan was compiled for a different tree)")
+        # a v1-manifest row carries no sharding column (pspec None):
+        # re-derive from the leaf type / path, same rules as compile
+        spec = row_spec.get(s)
+        if spec is None:
+            spec = serving_leaf_pspec(s, node)
+        spec = sanitize_spec(mesh, spec,
+                             getattr(node, "master_shape",
+                                     getattr(node, "shape", ())))
+        out.append(_place_serving_node(mesh, spec, node, types))
+    treedef = jax.tree_util.tree_structure(params, is_leaf=is_leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def tp_spec(tp_dim: int, ndim: int) -> Optional[P]:
+    """"model"-on-one-dim spec for a backend's registered ``tp_dim`` (None
+    when the leaf is not matmul-shaped). The single construction both the
+    plan compiler (``engine.plan._row_sharding``) and the plan-free
+    placement fallback (:func:`serving_leaf_pspec`) use, so the two paths
+    cannot diverge."""
+    if ndim < 2:
+        return None
+    entries = [None] * ndim
+    entries[tp_dim % ndim] = "model"
+    return P(*entries)
+
+
+def sanitize_spec(mesh: Mesh, spec: P, shape) -> P:
+    """Drop spec axes a concrete mesh cannot honour: axis names missing
+    from the mesh, dims not divisible by their axis size (placement stays
+    correct — those dims replicate), and entries beyond the array rank."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for i, e in enumerate(spec):
+        if i >= len(shape):     # spec longer than the array: truncate
+            break
+        axes = e if isinstance(e, (tuple, list)) else (e,)
+        axes = [a for a in axes if a is not None and a in sizes]
+        n = 1
+        for a in axes:
+            n *= sizes[a]
+        if not axes or shape[i] % n != 0:
+            out.append(None)
+        elif len(axes) == 1:
+            out.append(axes[0])
+        else:
+            out.append(tuple(axes))
+    return P(*out)
 
 
 def divisibility_report(cfg, n_model: int = 16) -> dict:

@@ -18,8 +18,12 @@ Architecture map::
                     binarized_dense  Alg.-1 ±1 values stored densely (conv
                                      fallback — no packed conv lowering)
                     dense            full-width master weights
-    plan.py       compile_plan(params, policy, mode) -> ExecutionPlan:
-                  per-path backend + reason + full eligibility map;
+    plan.py       compile_plan(params, policy, mode, mesh=...) ->
+                  ExecutionPlan: per-path backend + reason + full
+                  eligibility map + sharding column (mesh placement of the
+                  serving representation: binary backends TP-shard their
+                  registered tp_dim — the out-channel dim — over "model";
+                  dense leaves follow the Megatron path rules);
                   plan.pack(params) replaces the old pack_params monolith;
                   save()/load() JSON manifests; plan_report()/
                   format_plan_table() cost every layer under every
@@ -39,14 +43,21 @@ The plan compiler and the serving stack pick it up with no edits to
 models/layers, serve/engine or launch/serve.
 
 Plan manifest format (JSON, golden-checked in CI against
-``benchmarks/golden_plans/*.json``)::
+``benchmarks/golden_plans/*.json``; full schema in
+``docs/PLAN_MANIFEST.md``)::
 
-    {"version": 1, "mode": "xnor", "with_scale": true,
+    {"version": 2, "mode": "xnor", "with_scale": true,
      "layers": [{"path": "conv/2/kernel", "index": 8,
                  "shape": [3, 3, 128, 256], "backend": "xnor_conv",
                  "reason": "selected",
                  "eligible": {"xnor_conv": "ok", "binarized_dense": "ok",
-                              "dense": "ok"}}, ...]}
+                              "dense": "ok"},
+                 "sharding": [null, null, null, "model"]}, ...]}
+
+``repro.distributed.sharding.place_packed_params(mesh, packed, plan)``
+applies the sharding column to a packed tree;
+``serve.ServeEngine(cfg, packed, mesh=mesh, plan=plan)`` does it for you
+and serves tensor-parallel with bit-identical greedy streams.
 """
 from repro.engine.backends import (BINARIZED_DENSE, DENSE, PACKED, XNOR,
                                    XNOR_CONV)

@@ -199,6 +199,7 @@ BINARIZED_DENSE = register_backend(BackendSpec(
     name="binarized_dense", kinds=("conv",), priority=10, leaf_type=None,
     eligible=_conv_selected, pack=_pack_binarized_dense, apply=_apply_dense,
     cost=functools.partial(costs.gemm_cost, "binarized_dense"),
+    tp_dim=-1,
     doc="Conv fallback: Alg.-1 binarized values (±1 [* alpha]) stored "
         "densely; runs on the ordinary conv path."))
 
@@ -207,6 +208,7 @@ PACKED = register_backend(BackendSpec(
     eligible=_packable,
     pack=functools.partial(_pack_linear, PackedLinear), apply=_apply_packed,
     cost=functools.partial(costs.gemm_cost, "packed"),
+    tp_dim=-1,
     doc="Bitpacked binary weights, full-width activations: the MXU "
         "binary-matmul engine (repro.kernels)."))
 
@@ -215,6 +217,7 @@ XNOR = register_backend(BackendSpec(
     eligible=_xnor_eligible,
     pack=functools.partial(_pack_linear, XnorLinear), apply=_apply_xnor,
     cost=functools.partial(costs.gemm_cost, "xnor"),
+    tp_dim=-1,
     doc="Fully-binary FC: binary weights AND sign-packed activations, "
         "XNOR-popcount dot (repro.xnor)."))
 
@@ -223,5 +226,6 @@ XNOR_CONV = register_backend(BackendSpec(
     eligible=_xnor_conv_eligible, pack=_pack_xnor_conv,
     apply=_apply_xnor_conv,
     cost=functools.partial(costs.gemm_cost, "xnor_conv"),
+    tp_dim=-1,
     doc="Fully-binary conv: packed im2col patches + popcount GEMM "
         "(repro.xnor.conv)."))

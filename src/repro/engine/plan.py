@@ -13,6 +13,10 @@ reason, and the full eligibility map. The resulting :class:`ExecutionPlan`
   loudly,
 * supports per-layer overrides (``overrides={"conv/3": "binarized_dense"}``
   — keys match a leaf path exactly or as a '/'-prefix),
+* records a per-row *sharding column* (mesh placement of the serving
+  representation: packed word tensors TP-sharded on the out-channel dim
+  over "model", dense leaves on the Megatron rules) that
+  ``repro.distributed.sharding.place_packed_params`` applies at serve time,
 * feeds ``plan_report`` which costs every layer under every eligible
   backend (one source of truth for benchmarks and the roofline numbers).
 
@@ -33,7 +37,12 @@ from repro.core.binarize import BinarizeMode, _path_str
 from repro.engine import backends as _backends  # noqa: F401  (registers)
 from repro.engine import registry
 
-PLAN_VERSION = 1
+PLAN_VERSION = 2
+
+#: Manifest versions ``from_json`` accepts. v1 rows predate the sharding
+#: column (loaded with ``sharding=None``; placement falls back to the
+#: leaf-type rules in ``repro.distributed.sharding``).
+_READABLE_VERSIONS = (1, PLAN_VERSION)
 
 @dataclasses.dataclass
 class LayerAssignment:
@@ -45,18 +54,35 @@ class LayerAssignment:
     backend: str
     reason: str
     eligible: dict[str, str]       # backend -> "ok" | why-not
+    # Mesh placement of the *master-shape* leaf: one entry per dim, each
+    # None | axis-name | [axis-names]. Binary backends put "model" on the
+    # out-channel dim (tp_dim); dense leaves follow the Megatron path
+    # rules. None on a whole row = unannotated (a v1 manifest).
+    sharding: Optional[list] = None
+
+    @property
+    def pspec(self):
+        """The row's sharding column as a ``jax.sharding.PartitionSpec``
+        over the master shape (None if the row is unannotated)."""
+        if self.sharding is None:
+            return None
+        from repro.distributed.sharding import spec_from_json
+
+        return spec_from_json(self.sharding)
 
     def to_json(self) -> dict:
         return {"path": self.path, "index": self.index,
                 "shape": list(self.shape), "backend": self.backend,
-                "reason": self.reason, "eligible": dict(self.eligible)}
+                "reason": self.reason, "eligible": dict(self.eligible),
+                "sharding": self.sharding}
 
     @classmethod
     def from_json(cls, d: dict) -> "LayerAssignment":
         return cls(path=d["path"], index=int(d["index"]),
                    shape=tuple(int(s) for s in d["shape"]),
                    backend=d["backend"], reason=d["reason"],
-                   eligible=dict(d["eligible"]))
+                   eligible=dict(d["eligible"]),
+                   sharding=d.get("sharding"))
 
 
 @dataclasses.dataclass
@@ -125,9 +151,9 @@ class ExecutionPlan:
 
     @classmethod
     def from_json(cls, d: dict) -> "ExecutionPlan":
-        if d.get("version") != PLAN_VERSION:
+        if d.get("version") not in _READABLE_VERSIONS:
             raise ValueError(f"unsupported plan version {d.get('version')!r} "
-                             f"(expected {PLAN_VERSION})")
+                             f"(expected one of {_READABLE_VERSIONS})")
         return cls(mode=d["mode"], with_scale=bool(d["with_scale"]),
                    layers=[LayerAssignment.from_json(a) for a in d["layers"]],
                    version=int(d["version"]))
@@ -178,10 +204,29 @@ def _match_override(overrides: Mapping[str, str],
     return best
 
 
+def _row_sharding(path: str, shape: tuple, backend: str, mesh) -> list:
+    """The sharding column for one plan row: binary backends TP-shard their
+    registered ``tp_dim`` (the N / out-channel dim — the packed int32 word
+    dim is never split, so a 32-bit lane group never crosses a device
+    boundary); dense leaves follow the Megatron path rules. With a concrete
+    ``mesh``, axes the mesh cannot honour (missing name, non-divisible dim)
+    are dropped to replicated."""
+    from repro.distributed import sharding as SH
+
+    ndim = len(shape)
+    tp_dim = registry.get_backend(backend).tp_dim
+    spec = SH.tp_spec(tp_dim, ndim) if tp_dim is not None else None
+    if spec is None:
+        spec = SH.leaf_pspec(path, ndim)
+    if mesh is not None:
+        spec = SH.sanitize_spec(mesh, spec, shape)
+    return SH.spec_to_json(spec)
+
+
 def compile_plan(params, policy, mode: str | BinarizeMode = "det", *,
                  xnor_policy=None, with_scale: bool = True,
                  overrides: Optional[Mapping[str, str]] = None,
-                 warn: bool = True) -> ExecutionPlan:
+                 mesh=None, warn: bool = True) -> ExecutionPlan:
     """Assigns every leaf of ``params`` the highest-priority eligible
     backend under ``policy``/``mode`` and returns the explicit plan.
 
@@ -190,6 +235,15 @@ def compile_plan(params, policy, mode: str | BinarizeMode = "det", *,
     weights still binarize deterministically (Eq. 1). ``overrides`` forces
     named paths (exact or prefix) onto a specific backend — the override
     must still be eligible, except ``dense`` which is always allowed.
+
+    Every row also records a *sharding column*: the mesh placement of the
+    layer's serving representation (binary backends TP-shard the
+    out-channel dim over "model"; dense leaves follow the Megatron rules).
+    The column is mesh-independent axis names by default; passing a
+    concrete ``mesh`` (``jax.sharding.Mesh``) validates it — axes the mesh
+    cannot honour are downgraded to replicated in the recorded plan.
+    ``repro.distributed.sharding.place_packed_params(mesh, packed, plan)``
+    applies the column to a packed tree.
     """
     mode_str = mode.value if isinstance(mode, BinarizeMode) else str(mode)
     if mode_str != "xnor":
@@ -244,9 +298,10 @@ def compile_plan(params, policy, mode: str | BinarizeMode = "det", *,
                            f"backend serves {spec.kinds}, leaf is {kind}")
                     raise ValueError(
                         f"override {s!r} -> {forced!r}: ineligible ({why})")
-        rows.append(LayerAssignment(path=s, index=i, shape=shape,
-                                    backend=chosen, reason=reason,
-                                    eligible=elig))
+        rows.append(LayerAssignment(
+            path=s, index=i, shape=shape, backend=chosen, reason=reason,
+            eligible=elig,
+            sharding=_row_sharding(s, shape, chosen, mesh)))
     unused = [pat for pat, used in override_used.items() if not used]
     if unused:
         raise ValueError(

@@ -76,6 +76,13 @@ class BackendSpec:
     # keywords (plan_report passes them when the signature allows)
     cost: Callable[..., dict]
     doc: str = ""
+    # Master-weight dim tensor-parallel-sharded over the "model" mesh axis
+    # (negative = from the end). Bitpacked backends use -1 (the N /
+    # out-channel dim) so the int32 word dim is never split across devices
+    # — a sharded word would split a 32-bit lane group. None = no fixed TP
+    # dim; the plan compiler falls back to the Megatron path rules
+    # (repro.distributed.sharding.leaf_pspec).
+    tp_dim: Optional[int] = None
 
 
 _REGISTRY: dict[str, BackendSpec] = {}
@@ -128,6 +135,23 @@ def backend_for_leaf(leaf: Any, kind: str) -> BackendSpec:
     leaf class selects its backend; anything unregistered is dense."""
     spec = _LEAF_DISPATCH.get((kind, type(leaf)))
     return spec if spec is not None else _REGISTRY["dense"]
+
+
+def serving_leaf_types() -> tuple[type, ...]:
+    """Every leaf class some registered backend produces — the node types
+    mesh placement (``distributed.sharding.place_packed_params``) must
+    treat atomically, built-ins and user registrations alike."""
+    return tuple({s.leaf_type for s in _REGISTRY.values()
+                  if s.leaf_type is not None})
+
+
+def spec_for_serving_leaf(leaf: Any) -> Optional[BackendSpec]:
+    """The BackendSpec whose ``leaf_type`` produced ``leaf`` (None for
+    plain arrays / unregistered types), independent of kind."""
+    for (kind, t), spec in _LEAF_DISPATCH.items():
+        if t is type(leaf):
+            return spec
+    return None
 
 
 def apply_linear(w: Any, x: Any) -> Any:

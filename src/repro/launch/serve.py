@@ -17,11 +17,20 @@ Per-layer dispatch is compiled into an explicit execution plan
 ``ExecutionPlan.load``), ``--plan-from in.json`` serves a previously saved
 plan, and ``--override path=backend`` forces layers onto a named backend.
 
+Token archs also serve *mesh-sharded*: ``--mesh data,model --mesh-shape
+2,4`` places packed weights (out-channel dim TP over "model"), activations
+(ShardCtx constraints) and the slot-addressed decode cache (slots over
+"data") on an 8-device mesh, per the plan's sharding column. Greedy
+streams are bit-identical to single-device serving.
+
 Examples:
   PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b --smoke \
       --packed --requests 16 --prompt-len 32 --max-new 16
   PYTHONPATH=src python -m repro.launch.serve --arch vgg16-cifar10 --smoke \
       --packed --binarize xnor --requests 32 --slots 8 --plan-report
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+  PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b --smoke \
+      --packed --mesh data,model --mesh-shape 2,2 --requests 8
 """
 from __future__ import annotations
 
@@ -45,11 +54,45 @@ def wants_plan(args) -> bool:
                 or args.plan_report or args.override)
 
 
-def make_plan(params, policy, args) -> ExecutionPlan:
+def make_serve_mesh(args):
+    """Builds the serving mesh from --mesh/--mesh-shape (None when unset).
+
+    ``--mesh data,model`` names the axes; ``--mesh-shape 2,4`` gives the
+    per-axis device counts (default: all local devices on the last —
+    "model" — axis). On CPU, force a multi-device host with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``."""
+    if not args.mesh:
+        if args.mesh_shape:
+            raise SystemExit("--mesh-shape requires --mesh (axis names)")
+        return None
+    axes = tuple(a.strip() for a in args.mesh.split(",") if a.strip())
+    if args.mesh_shape:
+        shape = tuple(int(s) for s in args.mesh_shape.split(","))
+    else:
+        shape = (1,) * (len(axes) - 1) + (jax.device_count(),)
+    if len(shape) != len(axes):
+        raise SystemExit(f"--mesh has {len(axes)} axes but --mesh-shape "
+                         f"has {len(shape)} entries")
+    try:
+        # AttributeError: jax < 0.4.35 has no jax.make_mesh
+        mesh = jax.make_mesh(shape, axes)
+    except (ValueError, AssertionError, AttributeError) as e:
+        raise SystemExit(
+            f"cannot build mesh {dict(zip(axes, shape))} over "
+            f"{jax.device_count()} visible device(s): {e} — on CPU, set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N (and "
+            f"jax >= 0.4.35 for jax.make_mesh)") from None
+    print(f"mesh: {dict(zip(axes, shape))} over {mesh.devices.size} devices")
+    return mesh
+
+
+def make_plan(params, policy, args, mesh=None) -> ExecutionPlan:
     """Compile (or load) the execution plan and run the requested plan I/O.
 
     A loaded plan is authoritative: its recorded mode drives packing and
-    the binary-activation forward, superseding ``--binarize``."""
+    the binary-activation forward, superseding ``--binarize``. With a
+    ``mesh``, the compiled plan's sharding column is validated against it
+    (axes the mesh cannot honour downgrade to replicated)."""
     if (args.plan_from or args.override) and not args.packed:
         raise SystemExit("--plan-from/--override change how weights are "
                          "packed; add --packed (use --plan/--plan-report "
@@ -73,7 +116,7 @@ def make_plan(params, policy, args) -> ExecutionPlan:
             path, backend = kv.split("=", 1)
             overrides[path] = backend
         plan = compile_plan(params, policy, args.binarize,
-                            overrides=overrides or None)
+                            overrides=overrides or None, mesh=mesh)
     if args.plan:
         print(f"plan manifest -> {plan.save(args.plan)}")
     if args.plan_report:
@@ -163,26 +206,44 @@ def main() -> None:
     ap.add_argument("--max-new-skew", type=int, default=0,
                     help="randomize each request's max_new down by up to "
                          "this many tokens (exercises per-step slot refill)")
+    ap.add_argument("--mesh", default="",
+                    help="serve tensor-parallel on a device mesh: comma-"
+                         "separated axis names, e.g. 'data,model' (token "
+                         "archs only)")
+    ap.add_argument("--mesh-shape", default="",
+                    help="per-axis device counts for --mesh, e.g. '2,4' "
+                         "(default: all devices on the last axis)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     arch = cb.canonical_arch(args.arch)
     if arch in ("mnist_fc", "vgg16_cifar10"):
+        if args.mesh:
+            raise SystemExit("--mesh serving covers the token archs; the "
+                             "classifier path is fixed-batch single-device")
         serve_classifier(arch, args)
         return
     cfg = cb.get_config(arch, smoke=args.smoke)
     if cfg.frontend:
         raise SystemExit(f"{arch} uses a stubbed frontend; serve a token arch")
+    mesh = make_serve_mesh(args)
     params = T.init_lm(cfg, jax.random.key(args.seed))
+    plan = None
     if wants_plan(args):
-        plan = make_plan(params, DEFAULT_POLICY, args)
+        plan = make_plan(params, DEFAULT_POLICY, args, mesh=mesh)
     if args.packed:
         params = plan.pack(params, key=jax.random.key(args.seed + 1))
         dense_b, packed_b = packed_param_bytes(params)
         print(f"packed weights: {dense_b/1e6:.1f}MB (bf16 dense) -> "
               f"{packed_b/1e6:.1f}MB ({dense_b/max(packed_b,1):.1f}x smaller)")
 
-    engine = ServeEngine(cfg, params)
+    # mesh=None serves single-device; with a mesh the engine places the
+    # (packed) tree per the plan's sharding column and shards decode slots
+    # over "data" — greedy streams stay bit-identical either way. The plan
+    # is placement input only, so it is forwarded only alongside a mesh.
+    engine = ServeEngine(
+        cfg, params, mesh=mesh,
+        plan=plan if (args.packed and mesh is not None) else None)
     batcher = SlotBatcher(args.slots, args.prompt_len)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):

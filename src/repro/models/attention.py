@@ -132,9 +132,8 @@ def _sdpa(cfg, q, k, v, s: int):
 def attention(cfg, params: dict, x: jax.Array, positions: jax.Array,
               sh=None) -> jax.Array:
     """Full (training / prefill) self-attention. x: (B, S, D)."""
-    qkv = apply_linear(params["w_qkv"], x, params.get("b_qkv"))
-    if sh is not None:
-        qkv = sh.act(qkv, "btq")
+    qkv = apply_linear(params["w_qkv"], x, params.get("b_qkv"),
+                       sh=sh, kind="btq")
     q, k, v = _split_qkv(cfg, qkv)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
@@ -155,9 +154,8 @@ def attention_with_cache_write(cfg, params, x, positions, sh=None):
     """Prefill: same as :func:`attention` but also returns (k, v) to cache.
 
     Returned k/v are pre-GQA-expansion (B, S, KV, hd), post-RoPE."""
-    qkv = apply_linear(params["w_qkv"], x, params.get("b_qkv"))
-    if sh is not None:
-        qkv = sh.act(qkv, "btq")
+    qkv = apply_linear(params["w_qkv"], x, params.get("b_qkv"),
+                       sh=sh, kind="btq")
     q, k, v = _split_qkv(cfg, qkv)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)

@@ -132,28 +132,42 @@ class XnorConv:
         return 4
 
 
-def apply_linear(w, x: jax.Array, bias: jax.Array | None = None) -> jax.Array:
+def apply_linear(w, x: jax.Array, bias: jax.Array | None = None, *,
+                 sh=None, kind: str | None = None) -> jax.Array:
     """x @ w (+ bias). The leaf type of ``w`` selects its backend through
     the ``repro.engine`` registry (dense array, PackedLinear, XnorLinear, or
-    any user-registered serving leaf) — no isinstance chain here."""
+    any user-registered serving leaf) — no isinstance chain here.
+
+    ``sh``/``kind`` thread the activation-sharding context
+    (``repro.distributed.sharding.ShardCtx``) through the dispatch seam:
+    the constraint lands on the backend's *output* regardless of which
+    datapath served the layer, so packed / xnor leaves inherit exactly the
+    TP layout the dense path would produce. No-op when ``sh`` is None (or
+    built with ``mesh=None``)."""
     from repro.engine import registry
 
     out = registry.apply_linear(w, x)
     if bias is not None:
         out = out + bias.astype(out.dtype)
+    if sh is not None and kind is not None:
+        out = sh.act(out, kind)
     return out
 
 
 def apply_conv2d(w, x: jax.Array, bias: jax.Array | None = None, *,
-                 stride=(1, 1), padding="SAME") -> jax.Array:
+                 stride=(1, 1), padding="SAME", sh=None,
+                 kind: str | None = None) -> jax.Array:
     """conv2d(x, w) (+ bias) in NHWC/HWIO. The leaf type of ``w`` selects
     its backend through the ``repro.engine`` registry (dense / binarized-
-    dense kernels, XnorConv, or any user-registered serving leaf)."""
+    dense kernels, XnorConv, or any user-registered serving leaf).
+    ``sh``/``kind`` constrain the output like :func:`apply_linear`."""
     from repro.engine import registry
 
     out = registry.apply_conv2d(w, x, stride=stride, padding=padding)
     if bias is not None:
         out = out + bias.astype(out.dtype)
+    if sh is not None and kind is not None:
+        out = sh.act(out, kind)
     return out
 
 

@@ -25,16 +25,14 @@ def init_mlp(key, cfg, init_fn, d_ff=None) -> dict:
 
 
 def mlp(cfg, params: dict, x: jax.Array, sh=None) -> jax.Array:
+    # activation constraints ride through the dispatch seam (sh/kind on
+    # apply_linear), so packed / xnor serving leaves get the same TP layout
+    # as the dense path
     if "w_gate" in params:
-        g = apply_linear(params["w_gate"], x)
-        u = apply_linear(params["w_up"], x)
-        if sh is not None:
-            g = sh.act(g, "btf")
-            u = sh.act(u, "btf")
+        g = apply_linear(params["w_gate"], x, sh=sh, kind="btf")
+        u = apply_linear(params["w_up"], x, sh=sh, kind="btf")
         h = jax.nn.silu(g) * u
         return apply_linear(params["w_down"], h)
-    h = apply_linear(params["wi"], x)
-    if sh is not None:
-        h = sh.act(h, "btf")
+    h = apply_linear(params["wi"], x, sh=sh, kind="btf")
     h = jax.nn.gelu(h)
     return apply_linear(params["wo"], h)

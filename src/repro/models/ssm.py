@@ -124,9 +124,7 @@ def ssm_forward(cfg, params: dict, x: jax.Array, sh=None,
     di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
     p = cfg.ssm_head_dim
 
-    zxbcdt = apply_linear(params["in_proj"], x)
-    if sh is not None:
-        zxbcdt = sh.act(zxbcdt, "btn")
+    zxbcdt = apply_linear(params["in_proj"], x, sh=sh, kind="btn")
     z, xi, b_mat, c_mat, dt = _split_proj(cfg, zxbcdt)
 
     xbc_raw = jnp.concatenate([xi, b_mat, c_mat], axis=-1)

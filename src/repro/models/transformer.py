@@ -271,6 +271,34 @@ def cache_slot_axes(cfg) -> dict[str, int]:
     return {"pos": 0, "k": 1, "v": 1}
 
 
+def cache_pspecs(cfg, dp_axes=("data",)) -> dict:
+    """PartitionSpec per decode-cache entry: slots (the continuous-batching
+    batch dim) shard over the data axes, attention KV sequence / SSM heads
+    shard over "model" (flash-decoding style, matching the ``cache_kv`` /
+    ``ssm_state`` activation kinds in ``repro.distributed.sharding``).
+    Keyed like :func:`cache_slot_axes`; used by ``ServeEngine.init_decode``
+    to place the persistent :class:`~repro.serve.engine.DecodeState` on a
+    mesh. ``dp_axes`` may be empty (a pure tensor-parallel mesh with no
+    data axis): slots then replicate and only "model" dims shard."""
+    from jax.sharding import PartitionSpec as P
+
+    dp = (tuple(dp_axes) if len(dp_axes) > 1
+          else dp_axes[0] if dp_axes else None)
+    if cfg.family == "ssm":
+        return {"pos": P(dp),
+                "ssm": P(None, dp, "model"),       # (L, B, H, hp, N)
+                "conv": P(None, dp, None, "model")}  # (L, B, w-1, conv_dim)
+    if cfg.is_hybrid:
+        return {"pos": P(dp),
+                "k": P(None, dp, "model"),          # (n_per, B, S, kv, hd)
+                "v": P(None, dp, "model"),
+                "ssm": P(None, None, dp, "model"),  # (n_per, nm, B, H, ...)
+                "conv": P(None, None, dp, None, "model")}
+    return {"pos": P(dp),
+            "k": P(None, dp, "model"),              # (L, B, S, kv, hd)
+            "v": P(None, dp, "model")}
+
+
 def cache_insert(cfg, cache: dict, one: dict, slot) -> dict:
     """Insert a batch-1 cache ``one`` into ``cache`` at slot index ``slot``.
 

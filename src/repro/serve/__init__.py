@@ -3,14 +3,27 @@
 Module map:
 
 * ``engine``  — :class:`ServeEngine` (jitted prefill / decode_step /
-  prefill_into over one parameter tree), :class:`DecodeState` (the
-  persistent slot-addressed KV cache + per-slot next-token logits),
-  :func:`stream_serve` (the step-level serving loop), ``pack_params`` and
-  ``packed_param_bytes`` (weight-bytes accounting from true master shapes);
+  prefill_into over one parameter tree; with ``mesh=``/``plan=`` it places
+  params and decode state on a ("data", "model") mesh per the plan's
+  sharding column), :class:`DecodeState` (the persistent slot-addressed KV
+  cache + per-slot next-token logits), :func:`stream_serve` (the
+  step-level serving loop), ``pack_params`` and ``packed_param_bytes``
+  (weight-bytes accounting from true master shapes);
 * ``batcher`` — :class:`SlotBatcher` / :class:`Request`: fixed-slot request
   queue with suffix truncation to the static prompt width, per-request
   ``max_new``, and the TTFT / latency / tokens-recorded ledger the
   throughput numbers are derived from.
+
+**The ``stream_serve`` refill loop.** Each iteration (i) retires finished
+requests and re-prefills their slots from the queue — ``batcher.refill``
+retires *and* refills in one call, so a slot freed this step hosts a new
+request on the next; ``ServeEngine.prefill_into`` splices the newcomer's
+cache + first-token logits into the live state at a traced slot index —
+then (ii) emits one token for every active slot from the state's next-token
+logits, and (iii) runs one masked fixed-shape ``decode_step`` over *all*
+slots. No round barrier: per-request ``max_new`` is honored exactly, a
+request finishing mid-stream frees its slot for the next queued request,
+and the final emission skips the trailing decode step.
 
 The decode cache is long-lived and slot-addressed (``models.transformer.
 cache_insert``): requests join and leave mid-stream while every jitted

@@ -12,6 +12,13 @@ The batcher is also the accounting ledger: every request records submit /
 first-token / completion wall times (TTFT and per-request latency) and its
 generated tokens, so serving throughput is derived from tokens *actually
 recorded* (``tokens_generated``), never from steps-times-batch arithmetic.
+
+Under mesh-sharded serving the slot dimension is also the *placement*
+batch dim: ``ServeEngine.init_decode`` shards the decode cache's slot axes
+over the "data" mesh axes, so ``n_slots`` should be a multiple of the data
+axis size to shard evenly (a non-divisible count serves correctly but
+replicates the cache). The batcher itself is host-side bookkeeping and
+never touches device state.
 """
 from __future__ import annotations
 

@@ -22,9 +22,16 @@ finished request's slot is re-prefilled from the queue mid-stream
 advances all slots each step — sustained streaming throughput rather than
 round-based batch latency, which is where the binarized datapaths' byte
 savings actually pay off (cf. FINN, arXiv:1612.07119).
+
+Serving is also *mesh-shardable*: ``ServeEngine(cfg, params, mesh=mesh,
+plan=plan)`` places the packed tree and the slot-addressed decode cache on
+a ("data", "model") mesh following the plan's sharding column — the
+paper-to-TPU analogue of FINN-style datapath widening: BNN throughput comes
+from scaling the datapath wide across compute units, not from one unit.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Optional
 
@@ -143,10 +150,35 @@ class ServeEngine:
       request into a live cache at a slot index, and ``decode_step``
       advances *all* slots one token with a single fixed-shape jitted call.
       ``stream_serve`` drives the loop against a ``SlotBatcher``.
+
+    **Mesh-sharded serving.** Pass ``mesh`` (a ``jax.sharding.Mesh`` with
+    "data"/"model" axes) to serve tensor-parallel: the engine places the
+    parameter tree on the mesh (packed int32 weight words TP-sharded over
+    "model" on the out-channel dim — a 32-bit lane group never splits
+    across devices; dense leaves on the Megatron rules), builds a
+    ``ShardCtx`` so activation constraints thread through the
+    ``apply_linear``/``apply_conv2d`` dispatch, and places the persistent
+    decode cache with slots over "data" (``models.transformer.
+    cache_pspecs``). All jitted entry points run under ``mesh_context``.
+    Pass the ``plan`` the tree was packed with to follow its recorded
+    sharding column exactly (otherwise equivalent rules are re-derived
+    from leaf types and paths). Greedy streams stay bit-identical to the
+    single-device engine (asserted in ``tests/test_distributed.py``).
     """
 
-    def __init__(self, cfg, params, sh=None):
+    def __init__(self, cfg, params, sh=None, *, mesh=None, plan=None):
         self.cfg = cfg
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.distributed.sharding import (ShardCtx,
+                                                    place_packed_params)
+
+            if sh is None:
+                sh = ShardCtx(mesh)
+            params = place_packed_params(mesh, params, plan)
+        elif plan is not None:
+            raise ValueError("ServeEngine(plan=...) only places params on a "
+                             "mesh; pass mesh= as well (or drop plan=)")
         self.params = params
         self.sh = sh
         self._prefill = jax.jit(
@@ -163,6 +195,14 @@ class ServeEngine:
 
         self._prefill_into = jax.jit(_prefill_into, static_argnums=5)
 
+    def _mesh_ctx(self):
+        """Ambient-mesh context for every jitted call (no-op off-mesh)."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        from repro.distributed.sharding import mesh_context
+
+        return mesh_context(self.mesh)
+
     def generate(self, prompts: jax.Array, max_new: int,
                  temperature: float = 0.0,
                  key: Optional[jax.Array] = None) -> GenerationResult:
@@ -172,24 +212,27 @@ class ServeEngine:
                 "key=jax.random.key(...) to generate(), or use "
                 "temperature=0.0 for greedy decoding")
         b, s = prompts.shape[0], prompts.shape[1]
-        logits, cache = self._prefill(self.params, prompts, s + max_new)
-        toks, lps = [], []
-        tok = None
-        for i in range(max_new):
-            if temperature > 0.0:
-                key, sub = jax.random.split(key)
-                sample_logits = logits.astype(jnp.float32) / temperature
-                tok = jax.random.categorical(sub, sample_logits, axis=-1)
-            else:
-                sample_logits = logits.astype(jnp.float32)
-                tok = jnp.argmax(logits, axis=-1)
-            # logprob under the *sampled* (tempered) distribution — see
-            # GenerationResult for the convention
-            lp = jax.nn.log_softmax(sample_logits, axis=-1)
-            lps.append(jnp.take_along_axis(lp, tok[:, None], axis=-1)[:, 0])
-            toks.append(tok)
-            if i < max_new - 1:
-                logits, cache = self._decode(self.params, cache, tok[:, None])
+        with self._mesh_ctx():
+            logits, cache = self._prefill(self.params, prompts, s + max_new)
+            toks, lps = [], []
+            tok = None
+            for i in range(max_new):
+                if temperature > 0.0:
+                    key, sub = jax.random.split(key)
+                    sample_logits = logits.astype(jnp.float32) / temperature
+                    tok = jax.random.categorical(sub, sample_logits, axis=-1)
+                else:
+                    sample_logits = logits.astype(jnp.float32)
+                    tok = jnp.argmax(logits, axis=-1)
+                # logprob under the *sampled* (tempered) distribution — see
+                # GenerationResult for the convention
+                lp = jax.nn.log_softmax(sample_logits, axis=-1)
+                lps.append(jnp.take_along_axis(lp, tok[:, None],
+                                               axis=-1)[:, 0])
+                toks.append(tok)
+                if i < max_new - 1:
+                    logits, cache = self._decode(self.params, cache,
+                                                 tok[:, None])
         return GenerationResult(jnp.stack(toks, 1), jnp.stack(lps, 1), max_new)
 
     # -- step-level continuous batching -----------------------------------
@@ -199,11 +242,30 @@ class ServeEngine:
         """Allocate the persistent decode state: a zeroed slot-addressed
         cache sized for ``prompt_len + max_new_cap`` context positions and
         an empty next-token logits buffer. Slots fill via ``prefill_into``;
-        empty slots decode padding and are masked out by the caller."""
+        empty slots decode padding and are masked out by the caller.
+
+        On a mesh, the state is *placed*, not just allocated: slots shard
+        over the data axes and KV sequence / SSM heads over "model"
+        (``models.transformer.cache_pspecs``), so the long-lived cache
+        bytes — the decode working set — scale down per device."""
         ctx = prompt_len + max_new_cap
         cache = T.init_cache(self.cfg, n_slots, ctx)
         logits = jnp.zeros((n_slots, self.cfg.vocab_size),
                            self.cfg.activation_dtype)
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding
+            from repro.distributed.sharding import batch_axes, sanitize_spec
+
+            pspecs = T.cache_pspecs(self.cfg, batch_axes(self.mesh))
+
+            def put(a, spec):
+                spec = sanitize_spec(self.mesh, spec, a.shape)
+                return jax.device_put(a, NamedSharding(self.mesh, spec))
+
+            cache = {k: put(v, pspecs[k]) for k, v in cache.items()}
+            # logits (n_slots, vocab): slot dim placed exactly like the
+            # cache's pos/slot axes (same one-axis spec), vocab replicated
+            logits = put(logits, pspecs["pos"])
         return DecodeState(cache, logits, n_slots, prompt_len, max_new_cap)
 
     def prefill_into(self, state: DecodeState, slot: int,
@@ -213,9 +275,10 @@ class ServeEngine:
         index ``slot``. One compiled program serves every slot (the index
         is a traced scalar; all shapes are static)."""
         prompt = jnp.asarray(prompt, jnp.int32).reshape(1, state.prompt_len)
-        logits, cache = self._prefill_into(
-            self.params, state.cache, state.logits, prompt,
-            jnp.int32(slot), state.context_len)
+        with self._mesh_ctx():
+            logits, cache = self._prefill_into(
+                self.params, state.cache, state.logits, prompt,
+                jnp.int32(slot), state.context_len)
         return dataclasses.replace(state, cache=cache, logits=logits)
 
     def decode_step(self, state: DecodeState, tokens) -> DecodeState:
@@ -223,7 +286,8 @@ class ServeEngine:
         ``tokens``: (n_slots,) int32 — the token just emitted per slot;
         inactive slots feed padding and their outputs are ignored."""
         tokens = jnp.asarray(tokens, jnp.int32).reshape(state.n_slots, 1)
-        logits, cache = self._decode(self.params, state.cache, tokens)
+        with self._mesh_ctx():
+            logits, cache = self._decode(self.params, state.cache, tokens)
         return dataclasses.replace(state, cache=cache, logits=logits)
 
 

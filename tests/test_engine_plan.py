@@ -158,6 +158,86 @@ class TestCompile:
                          overrides={"layers/1/kernel": "int5"})
 
 
+class TestShardingColumn:
+    """Plan rows carry the mesh placement of each layer's serving
+    representation (tentpole: mesh-sharded serving)."""
+
+    def _lm_plan(self, mode="det"):
+        cfg = cb.get_config("starcoder2_3b", smoke=True)
+        lm = T.init_lm(cfg, jax.random.key(0))
+        return compile_plan(lm, DEFAULT_POLICY, mode, warn=False)
+
+    def test_binary_backends_tp_shard_out_channel(self):
+        """Every bitpacked row puts "model" on the last (N / out-channel)
+        dim and nowhere else — the int32 word dim must never split a
+        32-bit lane group across devices."""
+        plan = self._lm_plan("xnor")
+        binary = [a for a in plan.layers
+                  if a.backend in ("packed", "xnor", "xnor_conv",
+                                   "binarized_dense")]
+        assert binary, "expected bitpacked rows in the xnor plan"
+        for a in binary:
+            assert a.sharding[-1] == "model", a.path
+            assert all(e is None for e in a.sharding[:-1]), a.path
+
+    def test_dense_rows_follow_megatron_rules(self):
+        """w_o is row-parallel ("model" on the input dim) only when it
+        serves dense; under a binary backend it flips to out-channel."""
+        cfg = cb.get_config("starcoder2_3b", smoke=True)
+        lm = T.init_lm(cfg, jax.random.key(0))
+        from repro.core.policy import NONE_POLICY
+
+        dense_plan = compile_plan(lm, NONE_POLICY, "det", warn=False)
+        assert dense_plan["layers/attn/w_o"].backend == "dense"
+        assert dense_plan["layers/attn/w_o"].sharding == [None, "model", None]
+        packed_plan = self._lm_plan("det")
+        assert packed_plan["layers/attn/w_o"].backend == "packed"
+        assert packed_plan["layers/attn/w_o"].sharding == [None, None, "model"]
+        # non-matmul leaves replicate
+        assert all(e is None
+                   for e in packed_plan["layers/ln1/scale"].sharding)
+
+    def test_mesh_validation_downgrades_nondivisible(self):
+        """With a concrete mesh, a dim the mesh cannot split cleanly is
+        recorded replicated (placement never errors at serve time)."""
+        import dataclasses as dc
+
+        from repro.engine.plan import _row_sharding
+
+        class FakeMesh:
+            axis_names = ("data", "model")
+            devices = np.zeros((2, 3))    # model axis size 3
+
+        col = _row_sharding("layers/attn/w_qkv", (4, 64, 96), "packed",
+                            FakeMesh())
+        assert col == [None, None, "model"]       # 96 % 3 == 0
+        col = _row_sharding("layers/attn/w_qkv", (4, 64, 100), "packed",
+                            FakeMesh())
+        assert col == [None, None, None]          # 100 % 3 != 0 -> replicate
+
+    def test_v1_manifest_still_loads(self, tmp_path):
+        """A pre-sharding (version 1) manifest loads with sharding=None and
+        still packs; unknown versions still raise."""
+        fc = mnist_fc.init(jax.random.key(0), hidden=(128, 64))["params"]
+        plan = compile_plan(fc, DEFAULT_POLICY, "det", warn=False)
+        d = plan.to_json()
+        d["version"] = 1
+        for row in d["layers"]:
+            del row["sharding"]
+        p = os.path.join(tmp_path, "v1.json")
+        with open(p, "w") as f:
+            json.dump(d, f)
+        loaded = ExecutionPlan.load(p)
+        assert all(a.sharding is None and a.pspec is None
+                   for a in loaded.layers)
+        assert_trees_identical(loaded.pack(fc), plan.pack(fc))
+        d["version"] = 99
+        with open(p, "w") as f:
+            json.dump(d, f)
+        with pytest.raises(ValueError, match="version"):
+            ExecutionPlan.load(p)
+
+
 class TestRegistryDispatch:
     def test_backend_order_and_lookup(self):
         names = [s.name for s in backends()]

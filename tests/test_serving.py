@@ -169,6 +169,25 @@ class TestContinuousDecode:
             stream_serve(engine, batcher, max_new_cap=4)
 
 
+class TestServeCLI:
+    def test_packed_cli_serves_without_mesh(self, monkeypatch, capsys):
+        """Regression: the primary README serving path (--packed, no
+        --mesh) must not forward the compiled plan to ServeEngine —
+        plan= without mesh= is a placement error and raises."""
+        import sys
+
+        from repro.launch import serve as S
+
+        monkeypatch.setattr(sys, "argv", [
+            "serve", "--arch", "starcoder2-3b", "--smoke", "--packed",
+            "--requests", "2", "--slots", "2", "--prompt-len", "4",
+            "--max-new", "2"])
+        S.main()
+        out = capsys.readouterr().out
+        assert "packed weights" in out
+        assert "served 2 requests" in out
+
+
 class TestServingAccounting:
     def test_tokens_generated_counts_recorded_tokens(self):
         """Regression for the round-loop counter bug: tok/s must come from

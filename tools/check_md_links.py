@@ -1,0 +1,76 @@
+"""Markdown link checker: relative links in the repo docs must resolve.
+
+Scans the given markdown files (default: README.md, docs/*.md,
+benchmarks/README.md) for inline links/images `[text](target)` and checks
+that every *relative* target exists on disk (anchors are stripped; http/
+https/mailto targets are skipped — CI stays hermetic, no network). Exits
+non-zero listing every broken link, so a doc referring to a moved file or
+a renamed benchmark fails loudly instead of rotting.
+
+  python tools/check_md_links.py [FILES...]
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+# inline links/images; stops at the first ')' so "(see x)" prose is ignored
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_SKIP_SCHEMES = ("http://", "https://", "mailto:", "#")
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DEFAULT_FILES = ("README.md", "docs/*.md", "benchmarks/README.md")
+
+
+def iter_links(md_path: str):
+    text = open(md_path, encoding="utf-8").read()
+    in_code = False
+    for line in text.splitlines():
+        if line.strip().startswith("```"):
+            in_code = not in_code
+            continue
+        if in_code:
+            continue
+        for m in _LINK_RE.finditer(line):
+            yield m.group(1)
+
+
+def check(files: list[str]) -> list[str]:
+    errors = []
+    for md in files:
+        for target in iter_links(md):
+            if target.startswith(_SKIP_SCHEMES):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(md), path))
+            if not os.path.exists(resolved):
+                errors.append(f"{md}: broken link -> {target}")
+    return errors
+
+
+def main(argv=None) -> int:
+    args = (argv if argv is not None else sys.argv[1:])
+    if args:
+        files = args
+    else:
+        files = [f for pat in DEFAULT_FILES
+                 for f in sorted(glob.glob(os.path.join(REPO, pat)))]
+    if not files:
+        print("check_md_links: no markdown files found", file=sys.stderr)
+        return 1
+    errors = check(files)
+    if errors:
+        print("\n".join(errors), file=sys.stderr)
+        return 1
+    print(f"markdown links OK ({len(files)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
