@@ -1,0 +1,203 @@
+"""Stochastic-ensemble serving curves (suite name: ``ensemble``).
+
+Three question the paper's Eq.-2/3 stochastic nets raise for serving, all
+answered from the ``repro.stoch`` subsystem:
+
+* **bytes vs K** (full paper-scale shapes, ``jax.eval_shape`` — no weight
+  allocation): K bitpacked replicas of every stochastic layer against one
+  bf16 copy of the whole model. 1-bit packing is a 16x reduction, and the
+  input/classifier/bn leaves are shared (never replicated), so the packed
+  replica set stays under the dense baseline for every K <= 16 — the
+  scaling-by-replication headroom FINN-style datapath widening exploits.
+* **accuracy / agreement vs K** (smoke-size materialized nets, synthetic
+  data): ensemble-mean classification accuracy, replica vote agreement and
+  mean logit variance as K grows — the uncertainty signal flattens toward
+  its asymptote by K ~ 8.
+* **tok/s vs K** (smoke token arch through ``stream_serve``): the
+  throughput cost of holding K replica caches resident in the step-level
+  continuous-batching loop.
+
+Writes ``benchmarks/results/ensemble_bench.json``.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.engine import compile_plan, plan_report
+from repro.launch.train import make_paper_policy
+
+from benchmarks.common import csv_row, save_json
+from benchmarks.plan_bench import paper_model_trees
+
+K_GRID = (1, 2, 4, 8, 16)
+
+
+# ---------------------------------------------------------------------------
+# bytes vs K (full-size, shape-only)
+# ---------------------------------------------------------------------------
+
+def byte_curves() -> list[dict]:
+    """Per arch: K * (one replica's stochastic-leaf packed bytes) vs one
+    dense bf16 copy of the *whole* model, plus the true resident total
+    (shared leaves stored once). All arithmetic from the shared
+    ``repro.engine.costs`` model via ``plan_report``."""
+    records = []
+    for arch, (params, policy) in paper_model_trees().items():
+        plan = compile_plan(params, policy, "stoch", warn=False)
+        rows = plan_report(plan, batch=8, full=True)
+        stoch = {a.path for a in plan.stochastic_rows()}
+        dense_total = sum(r["weight_bytes_dense"] for r in rows)
+        stoch_packed = sum(r["weight_bytes"] for r in rows
+                           if r["path"] in stoch)
+        shared = sum(r["weight_bytes"] for r in rows
+                     if r["path"] not in stoch)
+        curve = []
+        for k in K_GRID:
+            rep = k * stoch_packed
+            curve.append({
+                "k": k,
+                "packed_replica_bytes": rep,
+                "total_with_shared": shared + rep,
+                "dense_bf16_bytes": dense_total,
+                "vs_dense": rep / dense_total,
+                "under_dense_bf16": bool(rep < dense_total),
+            })
+        records.append({"arch": arch, "mode": "stoch",
+                        "stoch_layer_packed_bytes": stoch_packed,
+                        "shared_bytes": shared,
+                        "dense_bf16_bytes": dense_total,
+                        "curve": curve})
+    return records
+
+
+# ---------------------------------------------------------------------------
+# accuracy / agreement vs K (smoke-size, materialized)
+# ---------------------------------------------------------------------------
+
+def _smoke_classifier(arch: str, seed: int):
+    from repro.models import mnist_fc, vgg
+
+    if arch == "mnist_fc":
+        from repro.configs import mnist_fc as C
+        tree = mnist_fc.init(jax.random.key(seed), hidden=C.SMOKE_HIDDEN)
+        return (tree, mnist_fc.apply, len(tree["params"]["layers"]), "mnist")
+    from repro.configs import vgg16_cifar10 as C
+    tree = vgg.init(jax.random.key(seed), width_mult=C.SMOKE_WIDTH_MULT)
+    return tree, vgg.apply, len(tree["params"]["fc"]), "cifar"
+
+
+def classifier_curves(fast: bool) -> list[dict]:
+    from repro.data import synthetic as syn
+    from repro.stoch import ensemble_forward, sample_replicas
+
+    ks = (1, 2, 4) if fast else K_GRID
+    batch, n_batches = (16, 1) if fast else (32, 2)
+    records = []
+    for arch in ("mnist_fc", "vgg16_cifar10"):
+        tree, apply_fn, n_fc, kind = _smoke_classifier(arch, seed=0)
+        params, mstate = tree["params"], tree["state"]
+        plan = compile_plan(params, make_paper_policy(n_fc), "stoch",
+                            warn=False)
+        spec = syn.SyntheticSpec(kind, n_train=batch * n_batches,
+                                 batch_size=batch, seed=0)
+        curve = []
+        for k in ks:
+            rs = sample_replicas(params, plan, jax.random.key(1), k)
+
+            @jax.jit
+            def fwd(x, rs=rs):
+                return ensemble_forward(
+                    rs, lambda t: apply_fn(t, mstate, x, training=False,
+                                           binary_act=False)[0])
+
+            accs, agrs, vrs = [], [], []
+            for step in range(n_batches):
+                x, y = syn.train_batch(spec, step)
+                if arch == "mnist_fc":
+                    x = x.reshape(x.shape[0], -1)
+                es = fwd(x)
+                pred = np.asarray(np.argmax(np.asarray(es.mean_logits), -1))
+                accs.append(float((pred == np.asarray(y)).mean()))
+                agrs.append(float(np.asarray(es.agreement).mean()))
+                vrs.append(float(np.asarray(es.variance).mean()))
+            curve.append({"k": k, "accuracy": float(np.mean(accs)),
+                          "vote_agreement": float(np.mean(agrs)),
+                          "logit_variance": float(np.mean(vrs))})
+        records.append({"arch": arch, "images": batch * n_batches,
+                        "smoke": True, "curve": curve})
+    return records
+
+
+# ---------------------------------------------------------------------------
+# tok/s vs K (smoke token arch, streaming loop)
+# ---------------------------------------------------------------------------
+
+def token_curves(fast: bool) -> dict:
+    from repro.configs import base as cb
+    from repro.core.policy import DEFAULT_POLICY
+    from repro.models import transformer as T
+    from repro.serve.batcher import SlotBatcher
+    from repro.serve.engine import ServeEngine, stream_serve
+    from repro.stoch import sample_replicas
+
+    arch = "starcoder2_3b"
+    cfg = cb.get_config(arch, smoke=True)
+    params = T.init_lm(cfg, jax.random.key(0))
+    plan = compile_plan(params, DEFAULT_POLICY, "stoch", warn=False)
+    ks = (1, 2) if fast else (1, 2, 4, 8)
+    n_req, slots, plen, mnew = (2, 2, 8, 4) if fast else (6, 2, 8, 8)
+    rng = np.random.default_rng(0)
+    curve = []
+    for k in ks:
+        rs = sample_replicas(params, plan, jax.random.key(1), k)
+        engine = ServeEngine(cfg, None, ensemble=rs)
+        batcher = SlotBatcher(slots, plen)
+        for _ in range(n_req):
+            batcher.submit(rng.integers(0, cfg.vocab_size, plen), mnew)
+        t0 = time.perf_counter()
+        stream_serve(engine, batcher)
+        dt = time.perf_counter() - t0
+        toks = batcher.tokens_generated
+        curve.append({"k": k, "tokens": toks, "seconds": dt,
+                      "tok_per_s": toks / dt})
+    return {"arch": arch, "smoke": True, "requests": n_req,
+            "max_new": mnew, "curve": curve}
+
+
+def main(fast: bool = False) -> list[str]:
+    lines: list[str] = []
+    bytes_rec = byte_curves()
+    for rec in bytes_rec:
+        for pt in rec["curve"]:
+            lines.append(csv_row(
+                f"ensemble/{rec['arch']}/bytes/k{pt['k']}",
+                pt["packed_replica_bytes"],
+                f"dense_bf16={pt['dense_bf16_bytes']};"
+                f"ratio={pt['vs_dense']:.3f};"
+                f"under_dense={pt['under_dense_bf16']}"))
+    cls_rec = classifier_curves(fast)
+    for rec in cls_rec:
+        for pt in rec["curve"]:
+            lines.append(csv_row(
+                f"ensemble/{rec['arch']}/quality/k{pt['k']}",
+                pt["vote_agreement"] * 1e3,
+                f"accuracy={pt['accuracy']:.3f};"
+                f"agreement={pt['vote_agreement']:.3f};"
+                f"variance={pt['logit_variance']:.4f}"))
+    tok_rec = token_curves(fast)
+    for pt in tok_rec["curve"]:
+        lines.append(csv_row(
+            f"ensemble/{tok_rec['arch']}/tok_s/k{pt['k']}",
+            pt["seconds"] * 1e6 / max(pt["tokens"], 1),
+            f"tok_per_s={pt['tok_per_s']:.1f}"))
+    save_json("ensemble_bench", {"bytes": bytes_rec,
+                                 "classifier": cls_rec,
+                                 "token": tok_rec})
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -18,7 +18,7 @@ from repro.launch.train import make_paper_policy
 
 from benchmarks.common import csv_row, save_json
 
-MODES = ("det", "xnor")
+MODES = ("det", "stoch", "xnor")
 
 
 def paper_model_trees() -> dict:

@@ -18,9 +18,9 @@ def main() -> None:
     ap.add_argument("--only", default="")
     args = ap.parse_args()
 
-    from benchmarks import (fig23_curves, kernel_bench, plan_bench,
-                            roofline_report, serve_bench, table1, xnor_bench,
-                            xnor_conv_bench)
+    from benchmarks import (ensemble_bench, fig23_curves, kernel_bench,
+                            plan_bench, roofline_report, serve_bench, table1,
+                            xnor_bench, xnor_conv_bench)
     suites = {
         "table1": table1.main,
         "fig23": fig23_curves.main,
@@ -30,6 +30,7 @@ def main() -> None:
         "xnor_conv": xnor_conv_bench.main,
         "plans": plan_bench.main,
         "serve": serve_bench.main,
+        "ensemble": ensemble_bench.main,
     }
     selected = (args.only.split(",") if args.only else list(suites))
     print("name,us_per_call,derived")

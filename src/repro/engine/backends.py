@@ -9,7 +9,8 @@ exactly the pytree the old code produced.
 
 Priority order (highest wins among eligible):
 
-  xnor_conv (40) > xnor (30) > packed (20) > binarized_dense (10) > dense (0)
+  xnor_conv (40) > xnor (30) > packed (20) > packed_conv (15)
+    > binarized_dense (10) > dense (0)
 
 To add backend N+1, write these four functions and call
 ``register_backend`` — no edits to models/layers, serve/engine or the plan
@@ -28,7 +29,8 @@ from repro.core.packing import PACK
 from repro.engine import costs
 from repro.engine.registry import (BackendSpec, LeafContext, PackContext,
                                    register_backend)
-from repro.models.layers import PackedLinear, XnorConv, XnorLinear
+from repro.models.layers import (PackedConv, PackedLinear, XnorConv,
+                                 XnorLinear)
 
 
 # ---------------------------------------------------------------------------
@@ -84,6 +86,19 @@ def _xnor_conv_eligible(lc: LeafContext) -> tuple[bool, str]:
     return _xnor_gate(lc)
 
 
+def _packed_conv_eligible(lc: LeafContext) -> tuple[bool, str]:
+    """Bitpacked conv weights, stoch mode only: in det/xnor mode the dense
+    binarized_dense fallback costs the same bytes per single sample, but a
+    K-replica stochastic ensemble (repro.stoch) needs 1-bit storage so K
+    replicas stay ~K/16 of one bf16 kernel."""
+    ok, why = _conv_selected(lc)
+    if not ok:
+        return ok, why
+    if lc.mode != "stoch":
+        return False, f"mode={lc.mode} != stoch (dense ±1 fallback is free)"
+    return True, "ok"
+
+
 # ---------------------------------------------------------------------------
 # pack transforms (bit-identical to the legacy pack_params monolith)
 # ---------------------------------------------------------------------------
@@ -92,10 +107,20 @@ def _pack_dense(lc: LeafContext, leaf, pc: PackContext):
     return leaf
 
 
+def _missing_key_error(lc: LeafContext) -> ValueError:
+    """Actionable 'no PRNG key' error naming the exact leaf that failed."""
+    return ValueError(
+        f"stochastic packing requires a PRNG key, but none was supplied "
+        f"for leaf {lc.path!r} (leaf index {lc.index}): pass "
+        f"key=jax.random.key(seed) to plan.pack(...) / pack_params(...), "
+        f"or compile the plan with mode='det' for keyless deterministic "
+        f"binarization")
+
+
 def _binarize_values(lc: LeafContext, leaf, pc: PackContext):
     if pc.weight_mode is BinarizeMode.STOCHASTIC:
         if pc.key is None:
-            raise ValueError("stochastic packing requires a key")
+            raise _missing_key_error(lc)
         return B.stochastic_binarize(leaf, jax.random.fold_in(pc.key, lc.index))
     return B.deterministic_binarize(leaf)
 
@@ -123,7 +148,7 @@ def _pack_linear(cls, lc: LeafContext, leaf, pc: PackContext):
     w2 = leaf.reshape((-1, k_dim, n_dim))
     if pc.weight_mode is BinarizeMode.STOCHASTIC:
         if pc.key is None:
-            raise ValueError("stochastic packing requires a key")
+            raise _missing_key_error(lc)
         ks = jax.random.split(jax.random.fold_in(pc.key, lc.index),
                               w2.shape[0])
         packed = jax.vmap(
@@ -138,6 +163,25 @@ def _pack_linear(cls, lc: LeafContext, leaf, pc: PackContext):
         scale = scale.reshape(lead + (n_dim,))
     packed = packed.reshape(lead + (k_dim // PACK, n_dim))
     return cls(packed, scale, k_dim)
+
+
+def _pack_packed_conv(lc: LeafContext, leaf, pc: PackContext):
+    """Binarize + bitpack a (kh, kw, C, N) conv kernel along the flattened
+    kh*kw*C axis (flat FC word layout; ops.py pads the ragged last word
+    with self-cancelling +1/-1 pairs, and apply slices back to the true K).
+    Stoch-mode only, so the key is mandatory."""
+    from repro.kernels import ops as kops
+
+    if pc.key is None:
+        raise _missing_key_error(lc)
+    kh, kw, c_in, n_dim = leaf.shape
+    scale = None
+    if pc.with_scale:
+        scale = jnp.mean(jnp.abs(leaf.astype(jnp.float32)), axis=(0, 1, 2))
+    w2 = leaf.reshape((kh * kw * c_in, n_dim))
+    packed = kops.binarize_and_pack(
+        w2, jax.random.fold_in(pc.key, lc.index), stochastic=True)
+    return PackedConv(packed, scale, (kh, kw), c_in)
 
 
 def _pack_xnor_conv(lc: LeafContext, leaf, pc: PackContext):
@@ -176,6 +220,18 @@ def _apply_xnor(w: XnorLinear, x):
     return out.astype(x.dtype)
 
 
+def _apply_packed_conv(w: PackedConv, x, *, stride=(1, 1), padding="SAME"):
+    from repro.core.packing import unpack_bits
+
+    kh, kw = w.ksize
+    n_dim = w.packed.shape[-1]
+    wb = unpack_bits(w.packed, dtype=jnp.float32)[: w.k]  # drop ragged pad
+    if w.scale is not None:
+        wb = wb * w.scale.astype(jnp.float32)[None, :]
+    wk = wb.reshape(kh, kw, w.c_in, n_dim)
+    return _apply_dense(wk, x, stride=stride, padding=padding)
+
+
 def _apply_xnor_conv(w: XnorConv, x, *, stride=(1, 1), padding="SAME"):
     from repro.xnor.conv import ops as cops
 
@@ -202,6 +258,17 @@ BINARIZED_DENSE = register_backend(BackendSpec(
     tp_dim=-1,
     doc="Conv fallback: Alg.-1 binarized values (±1 [* alpha]) stored "
         "densely; runs on the ordinary conv path."))
+
+PACKED_CONV = register_backend(BackendSpec(
+    name="packed_conv", kinds=("conv",), priority=15, leaf_type=PackedConv,
+    eligible=_packed_conv_eligible, pack=_pack_packed_conv,
+    apply=_apply_packed_conv,
+    cost=functools.partial(costs.gemm_cost, "packed"),
+    tp_dim=-1,
+    doc="Stoch-mode conv: binary kernel bitpacked along flattened kh*kw*C "
+        "(1-bit storage), unpacked to ±1 [* alpha] at apply time onto the "
+        "ordinary conv path — makes K-replica ensembles (repro.stoch) "
+        "affordable for conv nets."))
 
 PACKED = register_backend(BackendSpec(
     name="packed", kinds=("linear",), priority=20, leaf_type=PackedLinear,

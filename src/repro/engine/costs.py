@@ -28,11 +28,19 @@ def dense_weight_bytes(shape: tuple[int, ...], act_bytes: int = 2) -> int:
 
 
 def packed_weight_bytes(shape: tuple[int, ...], *, conv: bool = False,
-                        with_scale: bool = True) -> int:
-    """int32 bitpacked storage (+ f32 scale) of a projection/conv leaf."""
+                        with_scale: bool = True, flat: bool = False) -> int:
+    """int32 bitpacked storage (+ f32 scale) of a projection/conv leaf.
+
+    Conv leaves default to the xnor per-tap word layout
+    (kh*kw*ceil(C/32)); ``flat=True`` counts the packed_conv flat FC
+    layout instead (ceil(kh*kw*C/32) — the two differ when C % 32 != 0)."""
     if conv:
         kh, kw, c, n = shape[-4:]
-        words = patch_words((kh, kw), c) * n
+        if flat:
+            k = kh * kw * c
+            words = ((k + wpack.PACK - 1) // wpack.PACK) * n
+        else:
+            words = patch_words((kh, kw), c) * n
         lead = shape[:-4]
     else:
         k, n = shape[-2:]

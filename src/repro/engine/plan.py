@@ -37,12 +37,14 @@ from repro.core.binarize import BinarizeMode, _path_str
 from repro.engine import backends as _backends  # noqa: F401  (registers)
 from repro.engine import registry
 
-PLAN_VERSION = 2
+PLAN_VERSION = 3
 
 #: Manifest versions ``from_json`` accepts. v1 rows predate the sharding
 #: column (loaded with ``sharding=None``; placement falls back to the
-#: leaf-type rules in ``repro.distributed.sharding``).
-_READABLE_VERSIONS = (1, PLAN_VERSION)
+#: leaf-type rules in ``repro.distributed.sharding``). v2 manifests predate
+#: the ensemble ``replica_axis`` field (loaded with ``replica_axis=None``,
+#: i.e. replicated replicas).
+_READABLE_VERSIONS = (1, 2, PLAN_VERSION)
 
 @dataclasses.dataclass
 class LayerAssignment:
@@ -92,6 +94,10 @@ class ExecutionPlan:
     mode: str                      # det | stoch | xnor (engine mode)
     with_scale: bool
     layers: list[LayerAssignment]
+    # Mesh axis the ensemble replica dim (repro.stoch) shards over — "data",
+    # "model", or None for replicated replicas. Rides the manifest (v3+) so
+    # a loaded plan reproduces the same ensemble placement.
+    replica_axis: Optional[str] = None
     version: int = PLAN_VERSION
 
     # -- queries ----------------------------------------------------------
@@ -108,6 +114,15 @@ class ExecutionPlan:
     def fallthroughs(self) -> list[LayerAssignment]:
         """Policy-selected leaves that no binary backend could serve."""
         return [a for a in self.layers if a.reason.startswith("cannot pack")]
+
+    def stochastic_rows(self) -> list[LayerAssignment]:
+        """Rows whose pack transform consumes the stochastic PRNG key —
+        exactly the leaves ``repro.stoch.sample_replicas`` re-draws per
+        replica. Empty unless the plan mode is "stoch" (det/xnor packs are
+        keyless, so every replica would be identical)."""
+        if self.mode != "stoch":
+            return []
+        return [a for a in self.layers if a.backend != "dense"]
 
     # -- packing ----------------------------------------------------------
     def pack(self, params, key: Optional[jax.Array] = None):
@@ -147,6 +162,7 @@ class ExecutionPlan:
     def to_json(self) -> dict:
         return {"version": self.version, "mode": self.mode,
                 "with_scale": self.with_scale,
+                "replica_axis": self.replica_axis,
                 "layers": [a.to_json() for a in self.layers]}
 
     @classmethod
@@ -156,6 +172,7 @@ class ExecutionPlan:
                              f"(expected one of {_READABLE_VERSIONS})")
         return cls(mode=d["mode"], with_scale=bool(d["with_scale"]),
                    layers=[LayerAssignment.from_json(a) for a in d["layers"]],
+                   replica_axis=d.get("replica_axis"),
                    version=int(d["version"]))
 
     def save(self, path: str) -> str:
@@ -226,7 +243,8 @@ def _row_sharding(path: str, shape: tuple, backend: str, mesh) -> list:
 def compile_plan(params, policy, mode: str | BinarizeMode = "det", *,
                  xnor_policy=None, with_scale: bool = True,
                  overrides: Optional[Mapping[str, str]] = None,
-                 mesh=None, warn: bool = True) -> ExecutionPlan:
+                 mesh=None, replica_axis: Optional[str] = None,
+                 warn: bool = True) -> ExecutionPlan:
     """Assigns every leaf of ``params`` the highest-priority eligible
     backend under ``policy``/``mode`` and returns the explicit plan.
 
@@ -244,6 +262,12 @@ def compile_plan(params, policy, mode: str | BinarizeMode = "det", *,
     cannot honour are downgraded to replicated in the recorded plan.
     ``repro.distributed.sharding.place_packed_params(mesh, packed, plan)``
     applies the column to a packed tree.
+
+    ``replica_axis`` names the mesh axis an ensemble replica dim
+    (``repro.stoch.sample_replicas``) shards over — "data", "model", or
+    None (replicated). It is recorded in the manifest (v3) and consumed by
+    ``repro.stoch.place_replicas``; with a concrete ``mesh`` an unknown
+    axis name raises immediately instead of at placement time.
     """
     mode_str = mode.value if isinstance(mode, BinarizeMode) else str(mode)
     if mode_str != "xnor":
@@ -307,7 +331,13 @@ def compile_plan(params, policy, mode: str | BinarizeMode = "det", *,
         raise ValueError(
             f"overrides matched no applicable leaf: {unused} (paths are "
             f"'/'-joined, e.g. 'conv/3' or 'conv/3/kernel')")
-    plan = ExecutionPlan(mode=mode_str, with_scale=with_scale, layers=rows)
+    if (replica_axis is not None and mesh is not None
+            and replica_axis not in mesh.axis_names):
+        raise ValueError(
+            f"replica_axis {replica_axis!r} is not a mesh axis "
+            f"(mesh has {tuple(mesh.axis_names)})")
+    plan = ExecutionPlan(mode=mode_str, with_scale=with_scale, layers=rows,
+                         replica_axis=replica_axis)
     if warn:
         _warn_fallthroughs(plan)
     return plan
@@ -404,8 +434,10 @@ def plan_report(plan: ExecutionPlan, *, batch: int = 8,
             if a.shape else 0,
             "weight_bytes": (
                 C.packed_weight_bytes(a.shape, conv=conv,
-                                      with_scale=plan.with_scale)
-                if a.backend in ("packed", "xnor", "xnor_conv")
+                                      with_scale=plan.with_scale,
+                                      flat=a.backend == "packed_conv")
+                if a.backend in ("packed", "xnor", "xnor_conv",
+                                 "packed_conv")
                 else C.dense_weight_bytes(a.shape) if a.shape else 0),
             "costs": cost_by_backend,
         })

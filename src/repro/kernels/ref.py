@@ -37,9 +37,13 @@ def det_binarize_pack_ref(w: jax.Array) -> jax.Array:
 
 
 def stoch_binarize_pack_ref(w: jax.Array, bits: jax.Array) -> jax.Array:
-    """Stochastic binarize (Eq. 2/3 with supplied uniform words) then bitpack."""
+    """Stochastic binarize (Eq. 2/3 with supplied uniform words) then bitpack.
+
+    The p = 1 clip endpoint (w >= +1) is forced to bit 1: random words in
+    the top 128 values round up to 2^32.0f and would tie with the f32
+    threshold (matching the Pallas kernel's endpoint handling)."""
     p = jnp.clip((w.astype(jnp.float32) + 1.0) * 0.5, 0.0, 1.0)
     thresh = (p * _TWO32).astype(jnp.float32)
-    ones = (bits.astype(jnp.float32) < thresh)
+    ones = (bits.astype(jnp.float32) < thresh) | (p >= 1.0)
     pm1 = jnp.where(ones, 1.0, -1.0).astype(jnp.float32)
     return packing.pack_bits(pm1)

@@ -16,6 +16,11 @@ Layout: w     (K, N) f32/bf16 master weights
 
 The threshold is computed in uint32 fixed point: P(bit=1) = sigma(w) and
 ``bits < sigma(w) * 2^32`` has exactly that probability for uniform words.
+The clip endpoints are handled exactly: p = 1 (w >= +1, a value master-weight
+clipping produces) must yield bit 1 for *every* random word, but the f32
+comparison alone cannot guarantee it — words >= 2^32 - 128 round up to
+2^32.0f and tie with the threshold — so the kernels force the p >= 1 lane
+explicitly. p = 0 (w <= -1) is exact as-is (u < 0 never holds).
 """
 from __future__ import annotations
 
@@ -45,7 +50,9 @@ def _stoch_kernel(w_ref, bits_ref, o_ref, *, bk: int):
     p = jnp.clip((w + 1.0) * 0.5, 0.0, 1.0)            # Eq. (3)
     thresh = (p * _TWO32).astype(jnp.float32)
     u = bits_ref[...].astype(jnp.float32)               # uniform in [0, 2^32)
-    ones = (u < thresh).astype(jnp.uint32)              # P(one) = p  (Eq. 2)
+    # p >= 1 forced: u rounds to 2^32.0f for the top 128 words and would
+    # tie with the threshold, turning a sure bit into a 3e-8 miss
+    ones = ((u < thresh) | (p >= 1.0)).astype(jnp.uint32)  # P(one) = p (Eq. 2)
     o_ref[...] = _pack_block(ones, bk)
 
 
@@ -57,7 +64,7 @@ def _stoch_kernel_tpu_prng(seed_ref, w_ref, o_ref, *, bk: int):
     thresh = (p * _TWO32).astype(jnp.float32)
     raw = pltpu.prng_random_bits(w.shape)
     u = raw.astype(jnp.uint32).astype(jnp.float32)
-    ones = (u < thresh).astype(jnp.uint32)
+    ones = ((u < thresh) | (p >= 1.0)).astype(jnp.uint32)
     o_ref[...] = _pack_block(ones, bk)
 
 

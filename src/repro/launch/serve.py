@@ -23,9 +23,18 @@ Token archs also serve *mesh-sharded*: ``--mesh data,model --mesh-shape
 "data") on an 8-device mesh, per the plan's sharding column. Greedy
 streams are bit-identical to single-device serving.
 
+Stochastic *ensemble* serving (``repro.stoch``): ``--ensemble K`` (with
+``--packed --binarize stoch``) draws K independent packed replicas of every
+stochastic layer, decodes from the ensemble-mean logits, and reports replica
+vote agreement / logit variance per request; ``--abstain-threshold`` flags
+low-agreement requests. Works for both the token archs (resident replica
+cache in the streaming loop) and the classifiers (vmapped batch forward).
+
 Examples:
   PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b --smoke \
       --packed --requests 16 --prompt-len 32 --max-new 16
+  PYTHONPATH=src python -m repro.launch.serve --arch mnist-fc --smoke \
+      --packed --binarize stoch --ensemble 8 --abstain-threshold 0.6
   PYTHONPATH=src python -m repro.launch.serve --arch vgg16-cifar10 --smoke \
       --packed --binarize xnor --requests 32 --slots 8 --plan-report
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \
@@ -116,7 +125,13 @@ def make_plan(params, policy, args, mesh=None) -> ExecutionPlan:
             path, backend = kv.split("=", 1)
             overrides[path] = backend
         plan = compile_plan(params, policy, args.binarize,
-                            overrides=overrides or None, mesh=mesh)
+                            overrides=overrides or None, mesh=mesh,
+                            replica_axis=(args.replica_axis
+                                          if args.ensemble > 1 else None))
+    if args.ensemble > 1 and plan.replica_axis is None:
+        # a loaded v2 manifest (or one compiled without ensembles) carries
+        # no replica axis; adopt the CLI's
+        plan.replica_axis = args.replica_axis
     if args.plan:
         print(f"plan manifest -> {plan.save(args.plan)}")
     if args.plan_report:
@@ -146,36 +161,83 @@ def serve_classifier(arch: str, args) -> None:
 
     params, mstate = tree["params"], tree["state"]
     binary_act = False
+    ensemble_set = None
+    if args.ensemble > 1 and not (args.packed and args.binarize == "stoch"
+                                  or args.plan_from):
+        raise SystemExit("--ensemble K samples K stochastic replicas: add "
+                         "--packed --binarize stoch")
     if wants_plan(args):
         plan = make_plan(params, make_paper_policy(n_fc), args)
     if args.packed:
-        params = plan.pack(params, key=jax.random.key(args.seed + 1))
-        dense_b, packed_b = packed_param_bytes(params)
+        if args.ensemble > 1:
+            from repro.stoch import sample_replicas
+
+            if plan.mode != "stoch":
+                raise SystemExit(f"--ensemble needs a stochastic plan, got "
+                                 f"mode={plan.mode} (--binarize stoch)")
+            ensemble_set = sample_replicas(
+                params, plan, jax.random.key(args.seed + 1), args.ensemble)
+            params = ensemble_set.base
+            dense_b, _ = packed_param_bytes(params)
+            ens_b = ensemble_set.tree_nbytes()
+            print(f"ensemble K={args.ensemble} (stoch): {dense_b/1e6:.1f}MB "
+                  f"(bf16 dense, 1 copy) -> {ens_b/1e6:.1f}MB "
+                  f"({args.ensemble} packed replicas, shared leaves once)")
+        else:
+            params = plan.pack(params, key=jax.random.key(args.seed + 1))
+            dense_b, packed_b = packed_param_bytes(params)
+            print(f"packed weights ({plan.mode}): {dense_b/1e6:.1f}MB (bf16 "
+                  f"dense) -> {packed_b/1e6:.1f}MB "
+                  f"({dense_b/max(packed_b,1):.1f}x smaller)")
         # the plan's mode (not the CLI flag) decides the sign-activation
         # forward, so a loaded manifest serves self-consistently
         binary_act = plan.mode == "xnor"
-        print(f"packed weights ({plan.mode}): {dense_b/1e6:.1f}MB (bf16 "
-              f"dense) -> {packed_b/1e6:.1f}MB "
-              f"({dense_b/max(packed_b,1):.1f}x smaller)")
 
-    fwd = jax.jit(lambda p, s, x: apply_fn(p, s, x, training=False,
-                                           binary_act=binary_act)[0])
+    if ensemble_set is not None:
+        from repro.stoch import ensemble_forward
+
+        rs = ensemble_set
+        fwd = jax.jit(lambda x: ensemble_forward(
+            rs, lambda t: apply_fn(t, mstate, x, training=False,
+                                   binary_act=binary_act)[0]))
+    else:
+        fwd = jax.jit(lambda p, s, x: apply_fn(p, s, x, training=False,
+                                               binary_act=binary_act)[0])
     spec = syn.SyntheticSpec(kind, n_train=max(args.requests, args.slots),
                              batch_size=args.slots, seed=args.seed)
     t0, done, lat = time.perf_counter(), 0, []
+    agrees, n_abstained = [], 0
     for step in range(-(-args.requests // args.slots)):
         x, _ = syn.train_batch(spec, step)
         if arch == "mnist_fc":
             x = x.reshape(x.shape[0], -1)
         t1 = time.perf_counter()
-        preds = jax.numpy.argmax(fwd(params, mstate, x), axis=-1)
-        jax.block_until_ready(preds)
+        take = min(args.slots, args.requests - done)
+        if ensemble_set is not None:
+            es = fwd(x)
+            preds = jax.numpy.argmax(es.mean_logits, axis=-1)
+            jax.block_until_ready(preds)
+            agr = np.asarray(es.agreement)[:take]   # drop ragged-batch pad
+            agrees.append(agr)
+            if args.abstain_threshold is not None:
+                n_abstained += int((agr < args.abstain_threshold).sum())
+        else:
+            preds = jax.numpy.argmax(fwd(params, mstate, x), axis=-1)
+            jax.block_until_ready(preds)
         lat.append(time.perf_counter() - t1)
-        done += min(args.slots, args.requests - done)
+        done += take
     dt = time.perf_counter() - t0
     print(f"served {done} requests in {len(lat)} batches of {args.slots}, "
           f"{dt:.2f}s ({np.median(lat)*1e3:.1f} ms/batch median, "
           f"{done/dt:.1f} img/s)")
+    if agrees:
+        alla = np.concatenate(agrees)
+        msg = (f"ensemble uncertainty: mean vote agreement {alla.mean():.3f}"
+               f" (min {alla.min():.3f})")
+        if args.abstain_threshold is not None:
+            msg += (f"; abstained {n_abstained}/{done} at threshold "
+                    f"{args.abstain_threshold}")
+        print(msg)
 
 
 def main() -> None:
@@ -197,6 +259,19 @@ def main() -> None:
                     metavar="PATH=BACKEND",
                     help="force a layer (path or '/'-prefix) onto a backend, "
                          "e.g. conv/3=binarized_dense (repeatable)")
+    ap.add_argument("--ensemble", type=int, default=1, metavar="K",
+                    help="serve a K-replica stochastic ensemble (requires "
+                         "--packed --binarize stoch): tokens decode from "
+                         "the ensemble-mean logits and every request "
+                         "reports vote agreement / logit variance")
+    ap.add_argument("--abstain-threshold", type=float, default=None,
+                    help="flag a request as abstained when its replica "
+                         "vote agreement drops below this (needs "
+                         "--ensemble >= 2)")
+    ap.add_argument("--replica-axis", default="data",
+                    choices=["data", "model"],
+                    help="mesh axis the ensemble replica dim shards over "
+                         "(recorded in the plan manifest, v3)")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -229,21 +304,45 @@ def main() -> None:
     mesh = make_serve_mesh(args)
     params = T.init_lm(cfg, jax.random.key(args.seed))
     plan = None
+    ensemble_set = None
+    if args.ensemble > 1 and not (args.packed and args.binarize == "stoch"
+                                  or args.plan_from):
+        raise SystemExit("--ensemble K samples K stochastic replicas: add "
+                         "--packed --binarize stoch")
     if wants_plan(args):
         plan = make_plan(params, DEFAULT_POLICY, args, mesh=mesh)
     if args.packed:
-        params = plan.pack(params, key=jax.random.key(args.seed + 1))
-        dense_b, packed_b = packed_param_bytes(params)
-        print(f"packed weights: {dense_b/1e6:.1f}MB (bf16 dense) -> "
-              f"{packed_b/1e6:.1f}MB ({dense_b/max(packed_b,1):.1f}x smaller)")
+        if args.ensemble > 1:
+            from repro.stoch import sample_replicas
+
+            if plan.mode != "stoch":
+                raise SystemExit(f"--ensemble needs a stochastic plan, got "
+                                 f"mode={plan.mode} (--binarize stoch)")
+            # same key the single-sample pack uses, so replica 0 — and the
+            # whole K=1 ensemble — is bit-identical to --packed alone
+            ensemble_set = sample_replicas(
+                params, plan, jax.random.key(args.seed + 1), args.ensemble)
+            params = ensemble_set.base
+            dense_b, _ = packed_param_bytes(params)
+            ens_b = ensemble_set.tree_nbytes()
+            print(f"ensemble K={args.ensemble} (stoch): {dense_b/1e6:.1f}MB "
+                  f"(bf16 dense, 1 copy) -> {ens_b/1e6:.1f}MB "
+                  f"({args.ensemble} packed replicas, shared leaves once)")
+        else:
+            params = plan.pack(params, key=jax.random.key(args.seed + 1))
+            dense_b, packed_b = packed_param_bytes(params)
+            print(f"packed weights: {dense_b/1e6:.1f}MB (bf16 dense) -> "
+                  f"{packed_b/1e6:.1f}MB "
+                  f"({dense_b/max(packed_b,1):.1f}x smaller)")
 
     # mesh=None serves single-device; with a mesh the engine places the
     # (packed) tree per the plan's sharding column and shards decode slots
     # over "data" — greedy streams stay bit-identical either way. The plan
     # is placement input only, so it is forwarded only alongside a mesh.
     engine = ServeEngine(
-        cfg, params, mesh=mesh,
-        plan=plan if (args.packed and mesh is not None) else None)
+        cfg, None if ensemble_set is not None else params, mesh=mesh,
+        plan=plan if (args.packed and mesh is not None) else None,
+        ensemble=ensemble_set, abstain_threshold=args.abstain_threshold)
     batcher = SlotBatcher(args.slots, args.prompt_len)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
@@ -264,6 +363,15 @@ def main() -> None:
     print(f"served {len(done)} requests in {steps} decode steps, {dt:.2f}s "
           f"({n_tokens} tokens, {n_tokens/dt:.1f} tok/s; median TTFT "
           f"{ttft*1e3:.1f} ms, median latency {lat*1e3:.1f} ms)")
+    if ensemble_set is not None and done:
+        alla = np.array([a for r in done for a in r.agreement])
+        n_abst = sum(1 for r in done if r.abstained)
+        msg = (f"ensemble uncertainty: mean vote agreement "
+               f"{alla.mean():.3f} (min {alla.min():.3f})")
+        if args.abstain_threshold is not None:
+            msg += (f"; abstained {n_abst}/{len(done)} requests at "
+                    f"threshold {args.abstain_threshold}")
+        print(msg)
 
 
 if __name__ == "__main__":

@@ -132,6 +132,51 @@ class XnorConv:
         return 4
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedConv:
+    """Bitpacked *binary-weight* 2-D convolution leaf with real-valued
+    activations: the (kh, kw, C, N) kernel is binarized and bitpacked along
+    the flattened kh*kw*C contraction axis (flat FC word layout,
+    ceil(kh*kw*C/32) words per output channel), and at apply time the words
+    unpack back to ±1 [* alpha] and run through the ordinary dense conv —
+    ``binarized_dense`` numerics at 1-bit weight storage. This is what makes
+    K-replica stochastic ensembles (``repro.stoch``) affordable for conv
+    nets: K packed conv replicas cost ~K/16 of one bf16 kernel."""
+
+    packed: jax.Array               # (ceil(kh*kw*c_in/32), N) int32
+    scale: jax.Array | None         # (N,) f32 or None
+    ksize: tuple[int, int]          # static (kh, kw)
+    c_in: int                       # static input channels
+
+    def tree_flatten(self):
+        return (self.packed, self.scale), (self.ksize, self.c_in)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        packed, scale = children
+        return cls(packed, scale, aux[0], aux[1])
+
+    @property
+    def k(self):
+        """True contraction length kh*kw*c_in."""
+        return self.ksize[0] * self.ksize[1] * self.c_in
+
+    @property
+    def shape(self):
+        return (*self.ksize, self.c_in, self.packed.shape[-1])
+
+    @property
+    def master_shape(self):
+        """True (kh, kw, C, N) master shape; the flat packed layout may pad
+        the last word (ceil), dense-baseline accounting uses the true K."""
+        return self.shape
+
+    @property
+    def ndim(self):
+        return 4
+
+
 def apply_linear(w, x: jax.Array, bias: jax.Array | None = None, *,
                  sh=None, kind: str | None = None) -> jax.Array:
     """x @ w (+ bias). The leaf type of ``w`` selects its backend through

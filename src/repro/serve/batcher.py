@@ -41,6 +41,13 @@ class Request:
     t_submit: float = 0.0         # wall time at submit()
     t_first: Optional[float] = None   # wall time of the first recorded token
     t_done: Optional[float] = None    # wall time of the last recorded token
+    # Per-token ensemble uncertainty (only filled under K-replica serving —
+    # repro.stoch): replica vote agreement and mean logit variance aligned
+    # with ``generated``; ``abstained`` latches once any recorded token's
+    # agreement fell below the engine's abstain threshold.
+    agreement: list[float] = dataclasses.field(default_factory=list)
+    variance: list[float] = dataclasses.field(default_factory=list)
+    abstained: bool = False
 
     @property
     def done(self) -> bool:
@@ -105,13 +112,22 @@ class SlotBatcher:
                 out[i] = r.prompt
         return out
 
-    def record(self, tokens: np.ndarray) -> None:
+    def record(self, tokens: np.ndarray, agreement=None, variance=None,
+               abstained=None) -> None:
+        """Append one emitted token per live slot; the optional per-slot
+        arrays (ensemble serving) append the matching uncertainty stats."""
         now = time.perf_counter()
         for i, r in enumerate(self.slots):
             if r is not None and not r.done:
                 if r.t_first is None:
                     r.t_first = now
                 r.generated.append(int(tokens[i]))
+                if agreement is not None:
+                    r.agreement.append(float(agreement[i]))
+                if variance is not None:
+                    r.variance.append(float(variance[i]))
+                if abstained is not None and bool(abstained[i]):
+                    r.abstained = True
                 if r.done:
                     r.t_done = now
 

@@ -42,7 +42,8 @@ import numpy as np
 from repro.core.binarize import BinarizeMode
 from repro.engine import compile_plan
 from repro.models import transformer as T
-from repro.models.layers import PackedLinear, XnorConv, XnorLinear
+from repro.models.layers import (PackedConv, PackedLinear, XnorConv,
+                                 XnorLinear)
 
 
 def pack_params(params, policy, mode: str | BinarizeMode = "det",
@@ -84,7 +85,7 @@ def packed_param_bytes(params) -> tuple[int, int]:
     per-tap channel padding, or any future padded layout). The packed side
     counts the int32 words actually stored (pad words are real bytes)."""
     dense = packed = 0
-    packed_types = (PackedLinear, XnorLinear, XnorConv)
+    packed_types = (PackedLinear, XnorLinear, XnorConv, PackedConv)
     for leaf in jax.tree_util.tree_leaves(
             params, is_leaf=lambda x: isinstance(x, packed_types)):
         if isinstance(leaf, packed_types):
@@ -112,11 +113,22 @@ class GenerationResult:
     from — ``softmax(logits / temperature)`` when sampling, ``softmax(
     logits)`` for greedy decoding (temperature 0). Tempered logprobs are
     therefore comparable across tokens of one generation but not across
-    runs at different temperatures."""
+    runs at different temperatures.
+
+    The ensemble fields are populated only when the engine serves a
+    K >= 2 :class:`repro.stoch.ReplicaSet` (None otherwise):
+    ``vote_agreement[b, i]`` is the fraction of replicas whose argmax at
+    step i matched the ensemble vote, ``logit_variance[b, i]`` the mean
+    across-replica logit variance, and ``abstained[b]`` flags generations
+    whose worst-step agreement fell below the engine's
+    ``abstain_threshold``."""
 
     tokens: jax.Array          # (B, max_new)
     logprobs: jax.Array        # (B, max_new)
     steps: int
+    logit_variance: Optional[jax.Array] = None   # (B, max_new) f32
+    vote_agreement: Optional[jax.Array] = None   # (B, max_new) f32
+    abstained: Optional[jax.Array] = None        # (B,) bool
 
 
 @dataclasses.dataclass
@@ -126,11 +138,17 @@ class DecodeState:
     slot. Requests come and go (``prefill_into``); the state's shapes never
     change, so the jitted decode step never re-specializes."""
 
-    cache: dict                # slot-addressed decode cache (B = n_slots)
+    cache: dict                # slot-addressed decode cache (B = n_slots);
+                               # ensemble serving adds a leading (K,) axis
     logits: jax.Array          # (n_slots, vocab) next-token logits per slot
     n_slots: int
     prompt_len: int
     max_new_cap: int           # per-request max_new must be <= this
+    # Ensemble-serving uncertainty of each slot's current logits (None on
+    # the single-sample path): replica vote agreement and mean logit
+    # variance, refreshed by every prefill_into / decode_step.
+    agreement: Optional[jax.Array] = None        # (n_slots,) f32
+    variance: Optional[jax.Array] = None         # (n_slots,) f32
 
     @property
     def context_len(self) -> int:
@@ -166,16 +184,39 @@ class ServeEngine:
     single-device engine (asserted in ``tests/test_distributed.py``).
     """
 
-    def __init__(self, cfg, params, sh=None, *, mesh=None, plan=None):
+    def __init__(self, cfg, params, sh=None, *, mesh=None, plan=None,
+                 ensemble=None, abstain_threshold: Optional[float] = None):
         self.cfg = cfg
         self.mesh = mesh
+        self.abstain_threshold = abstain_threshold
+        self._replicas = None
+        if ensemble is not None:
+            from repro.stoch import ReplicaSet
+
+            if not isinstance(ensemble, ReplicaSet):
+                raise TypeError(
+                    f"ensemble= expects a repro.stoch.ReplicaSet "
+                    f"(sample_replicas(...)), got {type(ensemble).__name__}")
+            if params is not None and params is not ensemble.base:
+                raise ValueError(
+                    "pass either params or ensemble=ReplicaSet, not both "
+                    "(the ensemble's base tree is the parameter tree)")
+            plan = plan if plan is not None else ensemble.plan
         if mesh is not None:
             from repro.distributed.sharding import (ShardCtx,
                                                     place_packed_params)
 
             if sh is None:
                 sh = ShardCtx(mesh)
-            params = place_packed_params(mesh, params, plan)
+            if ensemble is not None:
+                from repro.stoch import place_replicas
+
+                ensemble = place_replicas(mesh, ensemble, plan)
+                params = ensemble.base
+            else:
+                params = place_packed_params(mesh, params, plan)
+        elif ensemble is not None:
+            params = ensemble.base
         elif plan is not None:
             raise ValueError("ServeEngine(plan=...) only places params on a "
                              "mesh; pass mesh= as well (or drop plan=)")
@@ -195,6 +236,60 @@ class ServeEngine:
 
         self._prefill_into = jax.jit(_prefill_into, static_argnums=5)
 
+        # K = 1 (or no stochastic rows) degrades to the plain single-sample
+        # path above on ensemble.base — structurally the same program, so
+        # the ensemble flag costs nothing and k=1 stays bit-identical.
+        if ensemble is not None and ensemble.k > 1 and ensemble.stacked:
+            self._replicas = ensemble
+            self._build_ensemble_fns()
+
+    def _build_ensemble_fns(self):
+        """Jitted K-replica variants of prefill / decode / prefill_into:
+        one vmap over the stacked stochastic leaves (and, for decode, the
+        replicated cache axis), shared base leaves broadcast by closure,
+        replica logits condensed to EnsembleStats inside the jit."""
+        from repro.stoch import ensemble_stats
+        from repro.stoch.replicas import _substitute
+
+        cfg, sh, k = self.cfg, self.sh, self._replicas.k
+
+        def _ens_prefill(stacked, base, toks, ml):
+            def one(st):
+                return T.prefill(cfg, _substitute(base, st), toks, sh,
+                                 max_len=ml)
+
+            rep_lg, rep_cache = jax.vmap(one, in_axes=0, axis_size=k)(stacked)
+            return ensemble_stats(rep_lg), rep_cache
+
+        self._prefill_ens = jax.jit(_ens_prefill, static_argnums=3)
+
+        def _ens_decode(stacked, base, cache, tok):
+            def one(st, c):
+                return T.decode_step(cfg, _substitute(base, st), c, tok, sh)
+
+            rep_lg, cache = jax.vmap(one, in_axes=(0, 0),
+                                     axis_size=k)(stacked, cache)
+            return ensemble_stats(rep_lg), cache
+
+        self._decode_ens = jax.jit(_ens_decode)
+
+        def _ens_prefill_into(stacked, base, cache, logits, agree, var,
+                              prompt, slot, ml):
+            def one(st, c):
+                lg, onec = T.prefill(cfg, _substitute(base, st), prompt, sh,
+                                     max_len=ml)
+                return lg, T.cache_insert(cfg, c, onec, slot)
+
+            rep_lg, cache = jax.vmap(one, in_axes=(0, 0),
+                                     axis_size=k)(stacked, cache)
+            es = ensemble_stats(rep_lg)          # mean (1, V); stats (1,)
+            upd = jax.lax.dynamic_update_slice_in_dim
+            return (upd(logits, es.mean_logits.astype(logits.dtype), slot, 0),
+                    upd(agree, es.agreement, slot, 0),
+                    upd(var, es.variance, slot, 0), cache)
+
+        self._ens_prefill_into = jax.jit(_ens_prefill_into, static_argnums=8)
+
     def _mesh_ctx(self):
         """Ambient-mesh context for every jitted call (no-op off-mesh)."""
         if self.mesh is None:
@@ -211,6 +306,8 @@ class ServeEngine:
                 "temperature-sampled generation requires a PRNG key: pass "
                 "key=jax.random.key(...) to generate(), or use "
                 "temperature=0.0 for greedy decoding")
+        if self._replicas is not None:
+            return self._generate_ensemble(prompts, max_new, temperature, key)
         b, s = prompts.shape[0], prompts.shape[1]
         with self._mesh_ctx():
             logits, cache = self._prefill(self.params, prompts, s + max_new)
@@ -235,6 +332,44 @@ class ServeEngine:
                                                  tok[:, None])
         return GenerationResult(jnp.stack(toks, 1), jnp.stack(lps, 1), max_new)
 
+    def _generate_ensemble(self, prompts, max_new, temperature, key):
+        """One-shot generation over all K replicas: tokens decode from the
+        ensemble-mean logits; every step also records vote agreement and
+        logit variance (same sampling/logprob conventions as the plain
+        path, applied to the mean logits)."""
+        rs = self._replicas
+        s = prompts.shape[1]
+        with self._mesh_ctx():
+            es, cache = self._prefill_ens(rs.stacked, rs.base, prompts,
+                                          s + max_new)
+            toks, lps, agrs, vrs = [], [], [], []
+            for i in range(max_new):
+                logits = es.mean_logits                  # already f32
+                if temperature > 0.0:
+                    key, sub = jax.random.split(key)
+                    sample_logits = logits / temperature
+                    tok = jax.random.categorical(sub, sample_logits, axis=-1)
+                else:
+                    sample_logits = logits
+                    tok = jnp.argmax(logits, axis=-1)
+                lp = jax.nn.log_softmax(sample_logits, axis=-1)
+                lps.append(jnp.take_along_axis(lp, tok[:, None],
+                                               axis=-1)[:, 0])
+                toks.append(tok)
+                agrs.append(es.agreement)
+                vrs.append(es.variance)
+                if i < max_new - 1:
+                    es, cache = self._decode_ens(rs.stacked, rs.base, cache,
+                                                 tok[:, None])
+        agreement = jnp.stack(agrs, 1)
+        abstained = None
+        if self.abstain_threshold is not None:
+            abstained = jnp.min(agreement, axis=1) < self.abstain_threshold
+        return GenerationResult(
+            jnp.stack(toks, 1), jnp.stack(lps, 1), max_new,
+            logit_variance=jnp.stack(vrs, 1), vote_agreement=agreement,
+            abstained=abstained)
+
     # -- step-level continuous batching -----------------------------------
 
     def init_decode(self, n_slots: int, prompt_len: int,
@@ -250,13 +385,29 @@ class ServeEngine:
         bytes — the decode working set — scale down per device."""
         ctx = prompt_len + max_new_cap
         cache = T.init_cache(self.cfg, n_slots, ctx)
+        ens = self._replicas
+        agreement = variance = None
+        if ens is not None:
+            # one cache per replica: a leading (K,) axis on every entry,
+            # kept resident across decode steps; the uncertainty columns
+            # start at the no-signal values (full agreement, zero variance)
+            cache = {k: jnp.zeros((ens.k,) + v.shape, v.dtype)
+                     for k, v in cache.items()}
+            agreement = jnp.ones((n_slots,), jnp.float32)
+            variance = jnp.zeros((n_slots,), jnp.float32)
         logits = jnp.zeros((n_slots, self.cfg.vocab_size),
-                           self.cfg.activation_dtype)
+                           jnp.float32 if ens is not None
+                           else self.cfg.activation_dtype)
         if self.mesh is not None:
             from jax.sharding import NamedSharding
             from repro.distributed.sharding import batch_axes, sanitize_spec
 
             pspecs = T.cache_pspecs(self.cfg, batch_axes(self.mesh))
+            if ens is not None:
+                from repro.stoch.ensemble import prepend_replica_axis
+
+                pspecs = {k: prepend_replica_axis(ens.plan.replica_axis, s)
+                          for k, s in pspecs.items()}
 
             def put(a, spec):
                 spec = sanitize_spec(self.mesh, spec, a.shape)
@@ -265,8 +416,14 @@ class ServeEngine:
             cache = {k: put(v, pspecs[k]) for k, v in cache.items()}
             # logits (n_slots, vocab): slot dim placed exactly like the
             # cache's pos/slot axes (same one-axis spec), vocab replicated
-            logits = put(logits, pspecs["pos"])
-        return DecodeState(cache, logits, n_slots, prompt_len, max_new_cap)
+            slot_spec = T.cache_pspecs(self.cfg,
+                                       batch_axes(self.mesh))["pos"]
+            logits = put(logits, slot_spec)
+            if ens is not None:
+                agreement = put(agreement, slot_spec)
+                variance = put(variance, slot_spec)
+        return DecodeState(cache, logits, n_slots, prompt_len, max_new_cap,
+                           agreement=agreement, variance=variance)
 
     def prefill_into(self, state: DecodeState, slot: int,
                      prompt) -> DecodeState:
@@ -275,6 +432,15 @@ class ServeEngine:
         index ``slot``. One compiled program serves every slot (the index
         is a traced scalar; all shapes are static)."""
         prompt = jnp.asarray(prompt, jnp.int32).reshape(1, state.prompt_len)
+        if self._replicas is not None:
+            rs = self._replicas
+            with self._mesh_ctx():
+                logits, agree, var, cache = self._ens_prefill_into(
+                    rs.stacked, rs.base, state.cache, state.logits,
+                    state.agreement, state.variance, prompt,
+                    jnp.int32(slot), state.context_len)
+            return dataclasses.replace(state, cache=cache, logits=logits,
+                                       agreement=agree, variance=var)
         with self._mesh_ctx():
             logits, cache = self._prefill_into(
                 self.params, state.cache, state.logits, prompt,
@@ -286,6 +452,15 @@ class ServeEngine:
         ``tokens``: (n_slots,) int32 — the token just emitted per slot;
         inactive slots feed padding and their outputs are ignored."""
         tokens = jnp.asarray(tokens, jnp.int32).reshape(state.n_slots, 1)
+        if self._replicas is not None:
+            rs = self._replicas
+            with self._mesh_ctx():
+                es, cache = self._decode_ens(rs.stacked, rs.base,
+                                             state.cache, tokens)
+            return dataclasses.replace(
+                state, cache=cache,
+                logits=es.mean_logits.astype(state.logits.dtype),
+                agreement=es.agreement, variance=es.variance)
         with self._mesh_ctx():
             logits, cache = self._decode(self.params, state.cache, tokens)
         return dataclasses.replace(state, cache=cache, logits=logits)
@@ -337,7 +512,14 @@ def stream_serve(engine: ServeEngine, batcher, *,
                 sub, state.logits.astype(jnp.float32) / temperature, axis=-1)
         else:
             tok = jnp.argmax(state.logits, axis=-1)
-        batcher.record(np.asarray(tok))
+        if state.agreement is not None:
+            agr = np.asarray(state.agreement)
+            thr = engine.abstain_threshold
+            batcher.record(np.asarray(tok), agreement=agr,
+                           variance=np.asarray(state.variance),
+                           abstained=None if thr is None else agr < thr)
+        else:
+            batcher.record(np.asarray(tok))
         steps += 1
         if batcher.idle:
             batcher.refill()   # flush the final completions; the trailing

@@ -1,0 +1,26 @@
+"""Stochastic ensemble subsystem: K-replica packed BNN inference.
+
+The paper's stochastically-binarized network (Eq. 2/3) defines a
+*distribution* over binary networks; this package samples K complete packed
+replicas from it (``sample_replicas``), runs them in one vmapped forward
+(``ensemble_forward``), and condenses the replica logits into calibrated
+uncertainty statistics (``ensemble_stats`` — mean logits, logit variance,
+vote agreement). Bitpacked storage makes the replication affordable: K
+replicas of a binary layer cost K/16 of one bf16 copy, so even K = 16 fits
+in a single dense layer's byte budget. Shared (non-stochastic) leaves are
+stored once and broadcast — never copied per replica.
+
+Integration points: ``repro.engine.plan`` records the ensemble mesh axis
+(``replica_axis``, manifest v3); ``repro.serve.engine.ServeEngine`` accepts
+``ensemble=ReplicaSet`` and threads agreement / variance / abstention into
+every GenerationResult; ``launch/serve.py --ensemble K`` drives it.
+"""
+from repro.stoch.ensemble import (EnsembleStats, ensemble_forward,
+                                  ensemble_stats, place_replicas,
+                                  replica_specs)
+from repro.stoch.replicas import ReplicaSet, replica_key, sample_replicas
+
+__all__ = [
+    "EnsembleStats", "ReplicaSet", "ensemble_forward", "ensemble_stats",
+    "place_replicas", "replica_key", "replica_specs", "sample_replicas",
+]

@@ -1,0 +1,158 @@
+"""K-replica sampling of a stochastically-binarized network.
+
+The paper's stochastic binarization (Eq. 2/3) draws each binary weight as a
+Bernoulli sample of the hard sigmoid of the master weight. A single
+``plan.pack(params, key)`` freezes *one* such sample forever; this module
+draws K independent samples — K complete packed networks — and holds them
+together with a leading replica axis, so inference can ensemble-average the
+replicas (``repro.stoch.ensemble``) and quote calibrated uncertainty.
+
+Bitpacking is what makes this affordable: one replica of a binary layer is
+1 bit/weight, so even K = 16 replicas cost what *one* bf16 copy of that
+layer costs. Leaves the plan does not binarize (embeddings, norms, biases,
+dense fallthroughs) are **shared** across replicas — stored once in the
+base tree and broadcast into every replica at apply time, never copied K
+times.
+
+Key-fold convention: replica r packs with ``replica_key(key, r)``, which is
+``key`` itself for r = 0 — so a K = 1 ensemble is *bit-identical* to the
+existing single-sample pack path ``plan.pack(params, key)`` (asserted in
+tests/test_stoch_ensemble.py). Within a replica the per-leaf folding is the
+engine's own (fold by leaf index, then per-stack-layer split), untouched.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+from repro.core.binarize import BinarizeMode, _path_str
+from repro.engine import registry
+from repro.engine.plan import ExecutionPlan, _leaf_context
+
+
+def replica_key(key: jax.Array, r: int) -> jax.Array:
+    """PRNG key for replica ``r``. Replica 0 uses ``key`` unchanged so the
+    first replica reproduces ``plan.pack(params, key)`` bit-for-bit; later
+    replicas fold in their index."""
+    return key if r == 0 else jax.random.fold_in(key, r)
+
+
+@dataclasses.dataclass
+class ReplicaSet:
+    """K packed replicas of one network.
+
+    ``base`` is the full replica-0 serving tree (the ordinary
+    ``plan.pack`` output — shared leaves live here exactly once).
+    ``stacked`` maps the path of every stochastic row to its serving node
+    with each stored array stacked on a new leading (K,) replica axis.
+    ``merge_replica(r)`` materializes the complete serving tree of one
+    replica; the ensemble forward (``repro.stoch.ensemble``) instead vmaps
+    over ``stacked`` directly and closes over the shared ``base`` leaves.
+    """
+
+    base: Any                          # full serving tree, replica 0
+    stacked: dict[str, Any]            # path -> serving node, arrays (K, ...)
+    k: int
+    paths: tuple[str, ...]             # stochastic-row paths, tree order
+    plan: ExecutionPlan
+
+    def merge_replica(self, r: int):
+        """Full serving tree for replica ``r`` (shared leaves + that
+        replica's slice of every stacked node)."""
+        if not 0 <= r < self.k:
+            raise IndexError(f"replica {r} out of range for k={self.k}")
+        picked = {p: _index_node(n, r) for p, n in self.stacked.items()}
+        return _substitute(self.base, picked)
+
+    def tree_nbytes(self) -> int:
+        """Total stored bytes: shared base + the K-stacked stochastic
+        leaves (replica 0's copy in ``base`` is counted as part of the
+        stack, not double-counted)."""
+        stoch = set(self.paths)
+        total = 0
+        for path, node in _serving_nodes(self.base):
+            if path not in stoch:
+                total += _node_nbytes(node)
+        for node in self.stacked.values():
+            total += _node_nbytes(node)
+        return total
+
+
+def _serving_nodes(tree):
+    types = registry.serving_leaf_types()
+    is_leaf = lambda x: isinstance(x, types)  # noqa: E731
+    return [(_path_str(p), n) for p, n in
+            jax.tree_util.tree_leaves_with_path(tree, is_leaf=is_leaf)]
+
+
+def _node_nbytes(node) -> int:
+    return sum(a.nbytes for a in jax.tree_util.tree_leaves(node))
+
+
+def _index_node(node, r: int):
+    return jax.tree.map(lambda a: a[r], node)
+
+
+def _stack_nodes(nodes: list):
+    """Stack the stored arrays of structurally-identical serving nodes on a
+    new leading replica axis (static aux data taken from the first)."""
+    import jax.numpy as jnp
+
+    kids0, treedef = jax.tree_util.tree_flatten(nodes[0])
+    cols = [jax.tree_util.tree_flatten(n)[0] for n in nodes]
+    stacked = [jnp.stack([col[i] for col in cols]) for i in range(len(kids0))]
+    return jax.tree_util.tree_unflatten(treedef, stacked)
+
+
+def _substitute(base, picked: dict[str, Any]):
+    """Replace serving nodes of ``base`` at the given paths."""
+    types = registry.serving_leaf_types()
+    is_leaf = lambda x: isinstance(x, types)  # noqa: E731
+
+    def pick(path, node):
+        return picked.get(_path_str(path), node)
+
+    return jax.tree_util.tree_map_with_path(pick, base, is_leaf=is_leaf)
+
+
+def sample_replicas(params, plan: ExecutionPlan, key: jax.Array,
+                    k: int) -> ReplicaSet:
+    """Draw ``k`` independent stochastic-binarization samples of ``params``
+    under ``plan``.
+
+    Only the plan's stochastic rows (``plan.stochastic_rows()`` — the
+    leaves whose pack transform consumes the PRNG key) are re-sampled per
+    replica; everything else is packed once and shared. Replica r packs
+    with ``replica_key(key, r)`` so replica 0 is bit-identical to
+    ``plan.pack(params, key)``.
+    """
+    if k < 1:
+        raise ValueError(f"ensemble size k must be >= 1, got {k}")
+    if plan.mode != "stoch":
+        raise ValueError(
+            f"sample_replicas needs a stochastic plan (mode='stoch'), got "
+            f"mode={plan.mode!r}: det/xnor packs are keyless, every replica "
+            f"would be identical")
+    rows = plan.stochastic_rows()
+    paths = tuple(a.path for a in rows)
+    masters = {_path_str(p): leaf for p, leaf in
+               jax.tree_util.tree_leaves_with_path(params)}
+
+    base = plan.pack(params, key=replica_key(key, 0))
+    base_nodes = dict(_serving_nodes(base))
+
+    stacked: dict[str, Any] = {}
+    for a in rows:
+        lc = _leaf_context(a, plan.mode)
+        spec = registry.get_backend(a.backend)
+        reps = [base_nodes[a.path]]                    # replica 0: reuse base
+        for r in range(1, k):
+            pc = registry.PackContext(
+                weight_mode=BinarizeMode.STOCHASTIC,
+                key=replica_key(key, r), with_scale=plan.with_scale)
+            reps.append(spec.pack(lc, masters[a.path], pc))
+        stacked[a.path] = _stack_nodes(reps)
+    return ReplicaSet(base=base, stacked=stacked, k=k, paths=paths,
+                      plan=plan)

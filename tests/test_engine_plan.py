@@ -15,8 +15,8 @@ from repro.engine import (ExecutionPlan, backends, compile_plan,
                           format_plan_table, get_backend, plan_report,
                           registry)
 from repro.models import mnist_fc, transformer as T, vgg
-from repro.models.layers import (PackedLinear, XnorConv, XnorLinear,
-                                 apply_conv2d, apply_linear)
+from repro.models.layers import (PackedConv, PackedLinear, XnorConv,
+                                 XnorLinear, apply_conv2d, apply_linear)
 from repro.serve.engine import pack_params
 
 
@@ -215,6 +215,40 @@ class TestShardingColumn:
                             FakeMesh())
         assert col == [None, None, None]          # 100 % 3 != 0 -> replicate
 
+    def test_v2_manifest_still_loads(self, tmp_path):
+        """A pre-ensemble (version 2) manifest — no ``replica_axis`` field —
+        loads with replica_axis=None and packs identically."""
+        fc = mnist_fc.init(jax.random.key(0), hidden=(128, 64))["params"]
+        plan = compile_plan(fc, DEFAULT_POLICY, "det", warn=False)
+        d = plan.to_json()
+        assert d["version"] == 3 and "replica_axis" in d
+        d["version"] = 2
+        del d["replica_axis"]
+        p = os.path.join(tmp_path, "v2.json")
+        with open(p, "w") as f:
+            json.dump(d, f)
+        loaded = ExecutionPlan.load(p)
+        assert loaded.replica_axis is None
+        assert_trees_identical(loaded.pack(fc), plan.pack(fc))
+
+    def test_replica_axis_roundtrip_and_validation(self, tmp_path):
+        """replica_axis survives save/load, and compile_plan rejects an
+        axis name the concrete mesh does not have."""
+        fc = mnist_fc.init(jax.random.key(0), hidden=(128, 64))["params"]
+        plan = compile_plan(fc, DEFAULT_POLICY, "stoch", warn=False,
+                            replica_axis="data")
+        p = os.path.join(tmp_path, "v3.json")
+        plan.save(p)
+        assert ExecutionPlan.load(p).replica_axis == "data"
+
+        class FakeMesh:
+            axis_names = ("model",)
+            devices = np.zeros((1,))
+
+        with pytest.raises(ValueError, match="replica_axis"):
+            compile_plan(fc, DEFAULT_POLICY, "stoch", warn=False,
+                         mesh=FakeMesh(), replica_axis="data")
+
     def test_v1_manifest_still_loads(self, tmp_path):
         """A pre-sharding (version 1) manifest loads with sharding=None and
         still packs; unknown versions still raise."""
@@ -241,9 +275,10 @@ class TestShardingColumn:
 class TestRegistryDispatch:
     def test_backend_order_and_lookup(self):
         names = [s.name for s in backends()]
-        assert names == ["xnor_conv", "xnor", "packed", "binarized_dense",
-                         "dense"]
+        assert names == ["xnor_conv", "xnor", "packed", "packed_conv",
+                         "binarized_dense", "dense"]
         assert get_backend("packed").leaf_type is PackedLinear
+        assert get_backend("packed_conv").leaf_type is PackedConv
 
     def test_leaf_type_dispatch(self):
         assert registry.backend_for_leaf(jnp.ones((4, 4)), "linear").name \
@@ -298,6 +333,43 @@ class TestRegistryDispatch:
             registry.unregister_backend("negated")
         assert registry.backend_for_leaf(NegatedLinear(w), "linear").name \
             == "dense"
+
+    def test_packed_conv_stoch_only_and_parity(self):
+        """packed_conv serves conv layers only in stoch mode (det conv
+        already has the free ±1 dense fallback), and its apply matches a
+        dense conv of the unpacked scaled ±1 weights bit-for-bit."""
+        cnn = vgg.init(jax.random.key(1), width_mult=0.125)["params"]
+        det = compile_plan(cnn, DEFAULT_POLICY, "det", warn=False)
+        assert det["conv/2/kernel"].backend == "binarized_dense"
+        assert "stoch" in det["conv/2/kernel"].eligible["packed_conv"]
+        stoch = compile_plan(cnn, DEFAULT_POLICY, "stoch", warn=False)
+        assert all(stoch[f"conv/{i}/kernel"].backend == "packed_conv"
+                   for i in range(1, 13))
+        packed = stoch.pack(cnn, key=jax.random.key(9))
+        from repro.core.packing import unpack_bits
+
+        leaf = packed["conv"][2]["kernel"]
+        assert isinstance(leaf, PackedConv)
+        kh, kw, c_in, n = leaf.shape
+        w = unpack_bits(leaf.packed, dtype=jnp.float32)[: leaf.k]
+        w = (w * leaf.scale).reshape(kh, kw, c_in, n)
+        x = jax.random.normal(jax.random.key(2), (2, 6, 6, c_in))
+        got = apply_conv2d(leaf, x)
+        want = jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_stoch_pack_without_key_names_leaf(self):
+        """Satellite: the missing-key error names the leaf path and the
+        fix, instead of a bare 'key required'."""
+        cnn = vgg.init(jax.random.key(1), width_mult=0.125)["params"]
+        plan = compile_plan(cnn, DEFAULT_POLICY, "stoch", warn=False)
+        with pytest.raises(ValueError) as ei:
+            plan.pack(cnn)
+        msg = str(ei.value)
+        assert "stochastic packing requires a PRNG key" in msg
+        assert "conv/1/kernel" in msg or "kernel" in msg
+        assert "mode='det'" in msg and "plan.pack" in msg
 
     def test_apply_conv2d_dense_via_registry(self):
         w = jax.random.normal(jax.random.key(0), (3, 3, 4, 8))
@@ -359,7 +431,7 @@ class TestGoldenManifests:
         from benchmarks.check_golden_plans import GOLDEN_DIR, compiled_plans
 
         plans = compiled_plans()
-        assert len(plans) == 4
+        assert len(plans) == 6
         for name, got in plans.items():
             path = os.path.join(GOLDEN_DIR, f"{name}.json")
             assert os.path.exists(path), f"golden manifest missing: {name}"

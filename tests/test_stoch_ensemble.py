@@ -1,0 +1,236 @@
+"""Stochastic ensemble serving (repro.stoch): Eq.-2/3 sampling statistics,
+replica reproducibility, k=1 bit-identity with the single-sample path, and
+ensemble uncertainty stats through generate / stream_serve."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base as cb
+from repro.core.policy import DEFAULT_POLICY
+from repro.engine import compile_plan
+from repro.kernels import ops as kops
+from repro.models import mnist_fc, transformer as T
+from repro.serve.batcher import SlotBatcher
+from repro.serve.engine import ServeEngine, stream_serve
+from repro.stoch import (EnsembleStats, ensemble_forward, ensemble_stats,
+                         replica_key, sample_replicas)
+
+
+def _tree_arrays(tree):
+    return [np.asarray(l) for l in jax.tree_util.tree_leaves(tree)]
+
+
+def assert_trees_identical(a, b):
+    assert jax.tree_util.tree_structure(a) == jax.tree_util.tree_structure(b)
+    for la, lb in zip(_tree_arrays(a), _tree_arrays(b)):
+        np.testing.assert_array_equal(la, lb)
+
+
+class TestSamplingStatistics:
+    """Satellite: the stochastic binarizer's empirical bit frequency matches
+    the paper's Eq. 3 hard sigmoid P(w_b = +1) = clip((w+1)/2, 0, 1)."""
+
+    def test_bit_frequency_matches_hard_sigmoid(self):
+        grid = jnp.array([-0.9, -0.5, -0.25, 0.0, 0.25, 0.5, 0.9])
+        samples = 4096                       # rows are iid draws per column
+        w = jnp.broadcast_to(grid[None, :], (samples, grid.shape[0]))
+        packed = kops.binarize_and_pack(w, jax.random.key(0),
+                                        stochastic=True)
+        from repro.core.packing import unpack_bits
+
+        bits = unpack_bits(packed, dtype=jnp.float32)[:samples]   # +-1
+        freq = np.asarray(jnp.mean((bits + 1.0) / 2.0, axis=0))
+        want = np.asarray(jnp.clip((grid + 1.0) / 2.0, 0.0, 1.0))
+        # 4096 iid draws: std <= 0.5/sqrt(4096) ~ 0.008; 5 sigma margin
+        np.testing.assert_allclose(freq, want, atol=0.04)
+
+    def test_endpoints_exact(self):
+        """w = +-1 must be deterministic (P = 1 / 0 exactly): the fixed
+        point threshold rounds 2^32 to f32 — without the endpoint guard the
+        top ~128 uint32 words would tie and flip sign."""
+        w = jnp.concatenate([jnp.full((64, 32), -1.0),
+                             jnp.full((64, 32), 1.0)], axis=1)
+        packed = kops.binarize_and_pack(w, jax.random.key(1),
+                                        stochastic=True)
+        from repro.core.packing import unpack_bits
+
+        bits = np.asarray(unpack_bits(packed, dtype=jnp.float32)[:64])
+        np.testing.assert_array_equal(bits[:, :32], -1.0)
+        np.testing.assert_array_equal(bits[:, 32:], 1.0)
+
+
+class TestReplicaSampling:
+    def _plan_params(self):
+        params = mnist_fc.init(jax.random.key(0), hidden=(128, 64))["params"]
+        plan = compile_plan(params, DEFAULT_POLICY, "stoch", warn=False)
+        return params, plan
+
+    def test_same_seed_bit_identical(self):
+        """Satellite: same seed -> bit-identical replica pytrees."""
+        params, plan = self._plan_params()
+        a = sample_replicas(params, plan, jax.random.key(5), 4)
+        b = sample_replicas(params, plan, jax.random.key(5), 4)
+        assert_trees_identical(a.base, b.base)
+        assert_trees_identical(a.stacked, b.stacked)
+        assert a.paths == b.paths and a.k == b.k == 4
+
+    def test_replicas_differ(self):
+        params, plan = self._plan_params()
+        rs = sample_replicas(params, plan, jax.random.key(5), 4)
+        assert rs.paths, "expected stochastic leaves in the smoke net"
+        for r in range(1, 4):
+            rep = rs.merge_replica(r)
+            diffs = sum(
+                int(not np.array_equal(la, lb))
+                for la, lb in zip(_tree_arrays(rs.base), _tree_arrays(rep)))
+            assert diffs > 0, f"replica {r} identical to replica 0"
+
+    def test_replica0_equals_single_sample_pack(self):
+        """Acceptance: replica 0 IS the existing single-sample stochastic
+        pack — same key, same bits (replica_key(key, 0) == key)."""
+        params, plan = self._plan_params()
+        key = jax.random.key(11)
+        rs = sample_replicas(params, plan, key, 3)
+        assert_trees_identical(rs.base, plan.pack(params, key=key))
+        assert jnp.array_equal(replica_key(key, 0), key)
+
+    def test_validation(self):
+        params, plan = self._plan_params()
+        with pytest.raises(ValueError, match="k"):
+            sample_replicas(params, plan, jax.random.key(0), 0)
+        det = compile_plan(params, DEFAULT_POLICY, "det", warn=False)
+        with pytest.raises(ValueError, match="stoch"):
+            sample_replicas(params, det, jax.random.key(0), 2)
+
+    def test_tree_nbytes_shares_base(self):
+        """Byte accounting: K replicas cost base + (K-1) extra stochastic
+        stacks, never K full copies (shared leaves stored once)."""
+        params, plan = self._plan_params()
+        b1 = sample_replicas(params, plan, jax.random.key(0), 1).tree_nbytes()
+        b4 = sample_replicas(params, plan, jax.random.key(0), 4).tree_nbytes()
+        assert b1 < b4 < 4 * b1
+
+
+class TestEnsembleForward:
+    def test_stats_shapes_and_k1_agreement(self):
+        logits = jax.random.normal(jax.random.key(0), (4, 8, 10))
+        es = ensemble_stats(logits)
+        assert isinstance(es, EnsembleStats)
+        assert es.mean_logits.shape == (8, 10)
+        assert es.variance.shape == (8,) and es.agreement.shape == (8,)
+        one = ensemble_stats(logits[:1])
+        np.testing.assert_array_equal(np.asarray(one.agreement), 1.0)
+        np.testing.assert_array_equal(np.asarray(one.variance), 0.0)
+        np.testing.assert_array_equal(np.asarray(one.mean_logits),
+                                      np.asarray(logits[0]))
+
+    def test_k1_forward_bit_identical_to_plain(self):
+        """Acceptance: ensemble_k=1 lowers to exactly the single-sample
+        stochastic program — bit-identical logits."""
+        tree = mnist_fc.init(jax.random.key(0), hidden=(128, 64))
+        params, state = tree["params"], tree["state"]
+        plan = compile_plan(params, DEFAULT_POLICY, "stoch", warn=False)
+        key = jax.random.key(3)
+        rs = sample_replicas(params, plan, key, 1)
+        x = jax.random.normal(jax.random.key(4), (4, 784))
+
+        def fwd(t):
+            return mnist_fc.apply(t, state, x, training=False)[0]
+
+        want = fwd(plan.pack(params, key=key))
+        got = ensemble_forward(rs, fwd)
+        np.testing.assert_array_equal(np.asarray(got.mean_logits),
+                                      np.asarray(want))
+
+    def test_vmapped_forward_averages_replicas(self):
+        """K>1: mean_logits equals the per-replica forwards averaged by
+        hand (via merge_replica), bit-tolerance only from the f32 mean."""
+        tree = mnist_fc.init(jax.random.key(0), hidden=(128, 64))
+        params, state = tree["params"], tree["state"]
+        plan = compile_plan(params, DEFAULT_POLICY, "stoch", warn=False)
+        rs = sample_replicas(params, plan, jax.random.key(3), 3)
+        x = jax.random.normal(jax.random.key(4), (2, 784))
+
+        def fwd(t):
+            return mnist_fc.apply(t, state, x, training=False)[0]
+
+        es = ensemble_forward(rs, fwd)
+        per_rep = jnp.stack([fwd(rs.merge_replica(r)) for r in range(3)])
+        np.testing.assert_allclose(
+            np.asarray(es.mean_logits),
+            np.asarray(jnp.mean(per_rep.astype(jnp.float32), axis=0)),
+            rtol=1e-5, atol=1e-5)
+
+
+class TestEnsembleServing:
+    def _cfg_params(self):
+        cfg = cb.get_config("starcoder2_3b", smoke=True)
+        params = T.init_lm(cfg, jax.random.key(0))
+        return cfg, params
+
+    def _prompts(self, cfg, n=2, s=8):
+        return jax.random.randint(jax.random.key(1), (n, s), 0,
+                                  cfg.vocab_size)
+
+    def test_k1_engine_bit_identical_to_stoch_packed(self):
+        """Acceptance: serving with ensemble_k=1 is bit-identical (tokens
+        AND logprobs) to the existing single-sample stochastic pack path."""
+        cfg, params = self._cfg_params()
+        plan = compile_plan(params, DEFAULT_POLICY, "stoch", warn=False)
+        key = jax.random.key(7)
+        plain = ServeEngine(cfg, plan.pack(params, key=key))
+        rs = sample_replicas(params, plan, key, 1)
+        ens = ServeEngine(cfg, None, ensemble=rs)
+        prompts = self._prompts(cfg)
+        a = plain.generate(prompts, max_new=6)
+        b = ens.generate(prompts, max_new=6)
+        np.testing.assert_array_equal(np.asarray(a.tokens),
+                                      np.asarray(b.tokens))
+        np.testing.assert_array_equal(np.asarray(a.logprobs),
+                                      np.asarray(b.logprobs))
+
+    def test_same_seed_same_ensemble_stream(self):
+        """Satellite: same seed -> identical K=2 greedy streams; the result
+        carries per-token uncertainty with valid ranges."""
+        cfg, params = self._cfg_params()
+        plan = compile_plan(params, DEFAULT_POLICY, "stoch", warn=False)
+        prompts = self._prompts(cfg)
+        outs = []
+        for _ in range(2):
+            rs = sample_replicas(params, plan, jax.random.key(2), 2)
+            eng = ServeEngine(cfg, None, ensemble=rs,
+                              abstain_threshold=2.0)  # everything abstains
+            outs.append(eng.generate(prompts, max_new=4))
+        a, b = outs
+        np.testing.assert_array_equal(np.asarray(a.tokens),
+                                      np.asarray(b.tokens))
+        np.testing.assert_array_equal(np.asarray(a.vote_agreement),
+                                      np.asarray(b.vote_agreement))
+        agr = np.asarray(a.vote_agreement)
+        assert a.tokens.shape == agr.shape == a.logit_variance.shape
+        assert ((agr >= 0.0) & (agr <= 1.0)).all()
+        assert (np.asarray(a.logit_variance) >= 0.0).all()
+        assert np.asarray(a.abstained).all()     # threshold 2.0 > max 1.0
+
+    def test_stream_serve_matches_generate(self):
+        """The continuous-batching loop with resident K-replica caches
+        emits the same greedy tokens as one-shot ensemble generate, and the
+        per-request uncertainty lands on the Request ledger."""
+        cfg, params = self._cfg_params()
+        plan = compile_plan(params, DEFAULT_POLICY, "stoch", warn=False)
+        rs = sample_replicas(params, plan, jax.random.key(2), 2)
+        engine = ServeEngine(cfg, None, ensemble=rs, abstain_threshold=0.0)
+        prompts = np.asarray(self._prompts(cfg, n=3))
+        max_new = 4
+        want = engine.generate(jnp.asarray(prompts), max_new=max_new)
+        batcher = SlotBatcher(n_slots=2, prompt_len=prompts.shape[1])
+        for p in prompts:
+            batcher.submit(p, max_new)
+        stream_serve(engine, batcher)
+        done = sorted(batcher.completed, key=lambda r: r.uid)
+        assert len(done) == 3
+        for i, r in enumerate(done):
+            assert r.generated == list(np.asarray(want.tokens)[i])
+            assert len(r.agreement) == len(r.variance) == max_new
+            assert not r.abstained       # threshold 0.0 never triggers
