@@ -1,13 +1,45 @@
 """Shared benchmark utilities."""
 from __future__ import annotations
 
+import datetime
 import json
 import os
+import platform
+import subprocess
 import time
 
 import jax
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def run_manifest(**extra) -> dict:
+    """Provenance stamp for a benchmark artifact: without the git SHA, jax
+    version and device inventory a committed number is unfalsifiable — you
+    can't tell whether a regression is a code change or a different machine.
+    ``extra`` lets a suite add run-specific fields (e.g. serve_bench records
+    the mesh shape its sharded subprocess forced)."""
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=os.path.dirname(__file__),
+            capture_output=True, text=True, timeout=10).stdout.strip() or None
+    except Exception:
+        sha = None
+    devices = jax.devices()
+    manifest = {
+        "git_sha": sha,
+        "jax_version": jax.__version__,
+        "backend": devices[0].platform if devices else None,
+        "device_count": jax.device_count(),
+        "device_kinds": sorted({d.device_kind for d in devices}),
+        "mesh_shape": None,
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "wall_clock_utc": datetime.datetime.now(datetime.timezone.utc)
+                          .isoformat(timespec="seconds"),
+    }
+    manifest.update(extra)
+    return manifest
 
 
 def timed(fn, *args, warmup: int = 1, iters: int = 5) -> float:
@@ -23,11 +55,16 @@ def timed(fn, *args, warmup: int = 1, iters: int = 5) -> float:
     return times[len(times) // 2]
 
 
-def save_json(name: str, record) -> str:
+def save_json(name: str, record, **manifest_extra) -> str:
+    """Writes ``{"run_manifest": ..., "results": record}`` — every suite
+    artifact carries its provenance under the same envelope regardless of
+    whether the suite's own record is a list or a dict."""
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, f"{name}.json")
+    payload = {"run_manifest": run_manifest(**manifest_extra),
+               "results": record}
     with open(path, "w") as f:
-        json.dump(record, f, indent=1)
+        json.dump(payload, f, indent=1)
     return path
 
 

@@ -66,11 +66,12 @@ def _submit_skewed(batcher, cfg, n: int, cap: int, n_long: int, short: int,
                        cap if i < n_long else short)
 
 
-def _run_step_loop(engine, batcher, cap: int) -> tuple[float, int, int]:
+def _run_step_loop(engine, batcher, cap: int,
+                   metrics=None) -> tuple[float, int, int]:
     from repro.serve.engine import stream_serve
 
     t0 = time.perf_counter()
-    steps = stream_serve(engine, batcher, max_new_cap=cap)
+    steps = stream_serve(engine, batcher, max_new_cap=cap, metrics=metrics)
     return time.perf_counter() - t0, steps, batcher.tokens_generated
 
 
@@ -209,9 +210,23 @@ def main(fast: bool = False):
         runner(engine, b, cap)
         b = _fresh_batcher(cfg, slots)
         _submit_skewed(b, cfg, n_req, cap, n_long, short)
-        dt, steps, toks = runner(engine, b, cap)
+        if loop == "step":
+            # the step loop reports itself through the metrics registry;
+            # the artifact keeps the full latency distribution, not just
+            # the throughput scalar
+            from repro.obs.metrics import MetricsRegistry
+            metrics = MetricsRegistry()
+            dt, steps, toks = _run_step_loop(engine, b, cap, metrics)
+        else:
+            metrics = None
+            dt, steps, toks = runner(engine, b, cap)
         record[f"{loop}_skewed"] = {"s": dt, "steps": steps, "tokens": toks,
                                     "tok_s": toks / dt}
+        if metrics is not None:
+            record[f"{loop}_skewed"]["step_latency"] = metrics.histogram(
+                "serve_step_seconds").summary()
+            record[f"{loop}_skewed"]["ttft"] = metrics.histogram(
+                "serve_ttft_seconds").summary()
         rows.append(csv_row(
             f"serve/{loop}_slots{slots}_skewed", dt / max(steps, 1) * 1e6,
             f"tok/s={toks / dt:.1f} tokens={toks}"))
@@ -283,7 +298,8 @@ def main(fast: bool = False):
                 f"ratio={tp / single:.2f}x identical={same} "
                 f"(2x2 CPU mesh: parity row, not a speedup claim)"))
 
-    save_json("serve_bench", record)
+    save_json("serve_bench", record,
+              mesh_shape=[2, 2] if sharded is not None else None)
     return rows
 
 

@@ -249,6 +249,12 @@ class HloCost:
         default_factory=lambda: defaultdict(int))
     dot_flops_by_shape: Dict[str, float] = dataclasses.field(
         default_factory=lambda: defaultdict(float))
+    # Top-level (fusion-boundary) copy ops: under SPMD these are where
+    # resharding materializes when no collective is needed (e.g. a layout
+    # change at the packed/dense boundary). Trip-count weighted like the
+    # collectives, so a copy inside a decode scan counts once per step.
+    copy_count: int = 0
+    copy_bytes: float = 0.0
     unparsed_while: int = 0
 
     def as_dict(self) -> dict:
@@ -258,6 +264,8 @@ class HloCost:
             "collective_bytes": self.collective_bytes,
             "collective_bytes_by_kind": dict(self.collective_bytes_by_kind),
             "collective_count": dict(self.collective_count),
+            "copy_count": self.copy_count,
+            "copy_bytes": self.copy_bytes,
             "unparsed_while": self.unparsed_while,
         }
 
@@ -353,6 +361,10 @@ def _walk(comps: Dict[str, HloComputation], comp: HloComputation,
                 cost.collective_bytes_by_kind[kind] += mult * b
                 cost.collective_count[kind] += int(mult)
                 break
+
+        if not in_fusion and oc == "copy":
+            cost.copy_count += int(mult)
+            cost.copy_bytes += mult * shape_bytes(op.shape)
 
         if not in_fusion and oc in _MATERIALIZING and oc != "fusion":
             # Sliced reads/writes touch only the slice, not the full operand.

@@ -391,7 +391,7 @@ def _accepts_cost_kwargs(fn) -> bool:
                or p.name in ("shape", "with_scale") for p in params)
 
 def plan_report(plan: ExecutionPlan, *, batch: int = 8,
-                full: bool = False) -> list[dict]:
+                full: bool = False, axis_sizes=None) -> list[dict]:
     """Costs every plan row under its assigned backend *and* every eligible
     alternative. ``batch`` is M, the GEMM rows per application. Note that a
     conv layer's im2col GEMM has one row per *output position*, so with the
@@ -400,9 +400,20 @@ def plan_report(plan: ExecutionPlan, *, batch: int = 8,
     spatially-resolved numbers. The static ``weight_bytes`` columns do not
     depend on ``batch``.
 
+    Every row also carries a ``collectives`` entry — what the row's
+    sharding column *implies* per application (all-gather for an
+    out-channel/TP split, all-reduce for a contraction split; None for
+    unsharded rows). Pass ``axis_sizes`` (e.g. ``{"model": 4}`` or
+    ``dict(zip(mesh.axis_names, mesh.devices.shape))``) to resolve the
+    participant count; rows whose sharded axes have size 1 report None.
+    This column is the static *prediction* — the measured per-step counts
+    come from ``repro.obs.audit_engine`` (``launch.serve
+    --audit-collectives``), which reads the compiled HLO.
+
     Returns one dict per row; by default only "interesting" rows (anything
     not an untouched policy-excluded dense leaf) are included."""
     from repro.engine import costs as C
+    from repro.obs.collectives import predict_row_collective
 
     rows = []
     for a in plan.layers:
@@ -440,14 +451,27 @@ def plan_report(plan: ExecutionPlan, *, batch: int = 8,
                                  "packed_conv")
                 else C.dense_weight_bytes(a.shape) if a.shape else 0),
             "costs": cost_by_backend,
+            "collectives": predict_row_collective(
+                a.sharding, a.shape, batch=batch, axis_sizes=axis_sizes),
         })
     return rows
 
 
+def _fmt_collective(c: Optional[dict]) -> str:
+    """Short cell for the plan table: 'all-gather@model 2.0KB/app'."""
+    if not c:
+        return "-"
+    axes = "+".join(c["axes"])
+    parts = f" x{c['parts']}" if c.get("parts") else ""
+    return f"{c['kind']}@{axes}{parts} {c['bytes_per_app'] / 1e3:.1f}KB/app"
+
+
 def format_plan_table(rows: list[dict]) -> str:
     """Aligned text table: path | backend | K x N | weight bytes (dense ->
-    assigned) | reason."""
-    hdr = ("path", "backend", "KxN", "w-bytes dense->plan", "reason")
+    assigned) | collectives (the sharding column's predicted per-app
+    collective) | reason."""
+    hdr = ("path", "backend", "KxN", "w-bytes dense->plan", "collectives",
+           "reason")
     table = [hdr]
     for r in rows:
         ratio = (r["weight_bytes_dense"] / r["weight_bytes"]
@@ -457,6 +481,7 @@ def format_plan_table(rows: list[dict]) -> str:
             f"{r['k']}x{r['n']}" if r["k"] else "-",
             f"{r['weight_bytes_dense']:,} -> {r['weight_bytes']:,} "
             f"({ratio:.1f}x)",
+            _fmt_collective(r.get("collectives")),
             r["reason"]))
     widths = [max(len(row[i]) for row in table) for i in range(len(hdr))]
     lines = ["  ".join(c.ljust(w) for c, w in zip(row, widths)).rstrip()

@@ -95,6 +95,13 @@ def make_serve_mesh(args):
     return mesh
 
 
+def mesh_axis_sizes(mesh) -> dict | None:
+    """{axis: size} for plan_report's predicted-collective column."""
+    if mesh is None:
+        return None
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
 def make_plan(params, policy, args, mesh=None) -> ExecutionPlan:
     """Compile (or load) the execution plan and run the requested plan I/O.
 
@@ -135,7 +142,8 @@ def make_plan(params, policy, args, mesh=None) -> ExecutionPlan:
     if args.plan:
         print(f"plan manifest -> {plan.save(args.plan)}")
     if args.plan_report:
-        print(format_plan_table(plan_report(plan, batch=args.slots)))
+        print(format_plan_table(plan_report(
+            plan, batch=args.slots, axis_sizes=mesh_axis_sizes(mesh))))
     if not args.packed:
         print("(--packed not set: serving dense master weights; the "
               "compiled plan is not applied)")
@@ -203,6 +211,11 @@ def serve_classifier(arch: str, args) -> None:
     else:
         fwd = jax.jit(lambda p, s, x: apply_fn(p, s, x, training=False,
                                                binary_act=binary_act)[0])
+    metrics = None
+    if args.metrics_out:
+        from repro.obs import MetricsRegistry
+
+        metrics = MetricsRegistry()
     spec = syn.SyntheticSpec(kind, n_train=max(args.requests, args.slots),
                              batch_size=args.slots, seed=args.seed)
     t0, done, lat = time.perf_counter(), 0, []
@@ -238,6 +251,30 @@ def serve_classifier(arch: str, args) -> None:
             msg += (f"; abstained {n_abstained}/{done} at threshold "
                     f"{args.abstain_threshold}")
         print(msg)
+    if metrics is not None:
+        h = metrics.histogram("serve_batch_seconds",
+                              "wall seconds per inference batch")
+        for s in lat:
+            h.observe(s)
+        metrics.counter("serve_images_total", "images classified").inc(done)
+        metrics.gauge("serve_img_per_s",
+                      "images / serving wall seconds").set(done / dt)
+        if agrees:
+            ah = metrics.histogram(
+                "serve_vote_agreement",
+                "per-image ensemble replica vote agreement (0-1)")
+            for a in np.concatenate(agrees):
+                ah.observe(float(a))
+            if args.abstain_threshold is not None:
+                metrics.counter("serve_abstain_total",
+                                "images below the abstain "
+                                "threshold").inc(n_abstained)
+        if args.metrics_out.endswith((".prom", ".txt")):
+            with open(args.metrics_out, "w") as f:
+                f.write(metrics.to_prometheus())
+            print(f"metrics (prometheus) -> {args.metrics_out}")
+        else:
+            print(f"metrics -> {metrics.save(args.metrics_out)}")
 
 
 def main() -> None:
@@ -289,6 +326,26 @@ def main() -> None:
                     help="per-axis device counts for --mesh, e.g. '2,4' "
                          "(default: all devices on the last axis)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default="", metavar="OUT.json",
+                    help="record a Chrome trace of the serving loop "
+                         "(span per step: refill/prefill/sample/record/"
+                         "decode, dispatch vs device time) and write it "
+                         "here — open in Perfetto; token archs only")
+    ap.add_argument("--no-trace-fence", action="store_true",
+                    help="with --trace: skip block_until_ready fencing "
+                         "(dispatch-only spans; does not serialize the "
+                         "async pipeline)")
+    ap.add_argument("--metrics-out", default="", metavar="OUT.json",
+                    help="write serving metrics (tok/s, TTFT, per-step "
+                         "latency p50/p95/p99, queue depth, slot "
+                         "occupancy, ensemble agreement/abstains) here; "
+                         "a .prom/.txt suffix selects Prometheus text "
+                         "exposition instead of JSON")
+    ap.add_argument("--audit-collectives", action="store_true",
+                    help="print the static per-step collective audit of "
+                         "the jitted decode_step/prefill_into (exact "
+                         "count + operand bytes per collective kind, "
+                         "from the compiled HLO; token archs only)")
     args = ap.parse_args()
 
     arch = cb.canonical_arch(args.arch)
@@ -296,6 +353,10 @@ def main() -> None:
         if args.mesh:
             raise SystemExit("--mesh serving covers the token archs; the "
                              "classifier path is fixed-batch single-device")
+        if args.trace or args.audit_collectives:
+            raise SystemExit("--trace/--audit-collectives instrument the "
+                             "step-level token serving loop; the classifier "
+                             "path is fixed-batch (use --metrics-out)")
         serve_classifier(arch, args)
         return
     cfg = cb.get_config(arch, smoke=args.smoke)
@@ -339,11 +400,30 @@ def main() -> None:
     # (packed) tree per the plan's sharding column and shards decode slots
     # over "data" — greedy streams stay bit-identical either way. The plan
     # is placement input only, so it is forwarded only alongside a mesh.
+    tracer = None
+    if args.trace:
+        from repro.obs import Tracer
+
+        tracer = Tracer(fence=not args.no_trace_fence)
+    metrics = None
+    if args.metrics_out:
+        from repro.obs import MetricsRegistry
+
+        metrics = MetricsRegistry()
     engine = ServeEngine(
         cfg, None if ensemble_set is not None else params, mesh=mesh,
         plan=plan if (args.packed and mesh is not None) else None,
-        ensemble=ensemble_set, abstain_threshold=args.abstain_threshold)
-    batcher = SlotBatcher(args.slots, args.prompt_len)
+        ensemble=ensemble_set, abstain_threshold=args.abstain_threshold,
+        tracer=tracer)
+    if args.audit_collectives:
+        from repro.obs import audit_engine, format_audit
+
+        print("static per-step collective audit (compiled HLO, "
+              "trip-count weighted):")
+        print(format_audit(audit_engine(
+            engine, n_slots=args.slots, prompt_len=args.prompt_len,
+            max_new_cap=args.max_new)))
+    batcher = SlotBatcher(args.slots, args.prompt_len, tracer=tracer)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         # per-request max_new: uniform in [max(1, max_new - skew), max_new]
@@ -352,7 +432,8 @@ def main() -> None:
                        max(1, m))
 
     t0 = time.perf_counter()
-    steps = stream_serve(engine, batcher, max_new_cap=args.max_new)
+    steps = stream_serve(engine, batcher, max_new_cap=args.max_new,
+                         metrics=metrics)
     dt = time.perf_counter() - t0
     done = batcher.completed
     # throughput from tokens actually recorded — never steps * batch, which
@@ -372,6 +453,27 @@ def main() -> None:
             msg += (f"; abstained {n_abst}/{len(done)} requests at "
                     f"threshold {args.abstain_threshold}")
         print(msg)
+    if metrics is not None:
+        h = metrics["serve_step_seconds"].summary()
+        if h.get("count"):
+            print(f"step latency: p50 {h['p50'] * 1e3:.1f} ms, p95 "
+                  f"{h['p95'] * 1e3:.1f} ms, p99 {h['p99'] * 1e3:.1f} ms "
+                  f"over {h['count']} steps")
+        if args.metrics_out.endswith((".prom", ".txt")):
+            with open(args.metrics_out, "w") as f:
+                f.write(metrics.to_prometheus())
+            print(f"metrics (prometheus) -> {args.metrics_out}")
+        else:
+            print(f"metrics -> {metrics.save(args.metrics_out)}")
+    if tracer is not None:
+        from repro.obs import validate_trace
+
+        path = tracer.save(args.trace)
+        info = validate_trace(path)
+        cov = ("n/a" if info["coverage"] is None
+               else f"{info['coverage'] * 100:.1f}%")
+        print(f"trace -> {path} ({info['spans']} spans, step coverage "
+              f"{cov}; open in https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,8 @@
+"""``python -m repro.obs trace.json [--min-coverage 0.95]`` — validate a
+Chrome trace emitted by ``launch.serve --trace`` (schema + span coverage).
+Same CLI as ``python -m repro.obs.trace`` without runpy's re-import
+warning (the package __init__ already imports the submodule)."""
+from repro.obs.trace import main
+
+if __name__ == "__main__":
+    main()

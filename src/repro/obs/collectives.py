@@ -1,0 +1,211 @@
+"""Static per-step collective audit of the jitted serving programs.
+
+The ROADMAP's sharded-serving item names its success metric directly: "a
+per-step collective count asserted in tests". This module produces that
+number *statically* — no serving run needed — by walking the compiled,
+SPMD-partitioned HLO of the engine's jitted ``decode_step`` /
+``prefill_into`` with the existing ``repro.core.hlo_analysis`` parser:
+
+* per collective kind (all-gather / reduce-scatter / all-reduce /
+  all-to-all / collective-permute): the exact count and operand bytes
+  executed per step, *trip-count weighted* (a collective inside the
+  per-layer decode scan counts once per layer, which XLA's own
+  ``cost_analysis`` gets wrong on CPU);
+* resharding copies: top-level ``copy`` ops — where GSPMD materializes a
+  placement change that needs no cross-device traffic, e.g. at the
+  packed/dense boundary when an int32 word tensor's layout meets a dense
+  activation.
+
+Consumers: ``plan_report`` (a per-row predicted-collective column from the
+plan's sharding metadata — what the plan *implies*), ``launch.serve
+--audit-collectives`` (the measured table for the engine actually built),
+``benchmarks/check_collectives.py`` (the CI golden gate: a code change that
+silently adds a collective to ``decode_step`` fails the diff), and
+``tests/test_obs_collectives.py`` (exact counts for the det/xnor sharded
+golden plans on the forced 4-device CPU mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.core import hlo_analysis as H
+
+#: Activation-stream bytes/element for the predicted-collective column
+#: (matches the ``engine/costs.py`` convention: bf16 activations).
+ACT_BYTES = 2
+
+
+@dataclasses.dataclass
+class CollectiveAudit:
+    """Per-execution collective profile of one compiled program."""
+
+    entry: str                       # which jitted program ("decode_step")
+    counts: Dict[str, int]           # kind -> count per execution
+    bytes: Dict[str, float]          # kind -> operand bytes per execution
+    reshard_copies: int = 0
+    reshard_copy_bytes: float = 0.0
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.counts.values())
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes.values())
+
+    def to_json(self) -> dict:
+        return {"entry": self.entry,
+                "counts": {k: self.counts[k] for k in sorted(self.counts)},
+                "bytes": {k: self.bytes[k] for k in sorted(self.bytes)},
+                "reshard_copies": self.reshard_copies,
+                "reshard_copy_bytes": self.reshard_copy_bytes}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "CollectiveAudit":
+        return cls(entry=d["entry"],
+                   counts={k: int(v) for k, v in d["counts"].items()},
+                   bytes={k: float(v) for k, v in d["bytes"].items()},
+                   reshard_copies=int(d.get("reshard_copies", 0)),
+                   reshard_copy_bytes=float(d.get("reshard_copy_bytes", 0.0)))
+
+    def summary(self) -> str:
+        if not self.counts:
+            core = "no collectives"
+        else:
+            core = ", ".join(
+                f"{k} x{self.counts[k]} ({self.bytes.get(k, 0) / 1e3:.1f}KB)"
+                for k in sorted(self.counts))
+        return (f"{self.entry}: {core}; reshard copies "
+                f"{self.reshard_copies} "
+                f"({self.reshard_copy_bytes / 1e3:.1f}KB)")
+
+
+def audit_hlo(text: str, entry: str = "program",
+              hlo_entry: Optional[str] = None) -> CollectiveAudit:
+    """Audits optimized HLO text (``compiled.as_text()``): collective
+    counts/bytes per kind plus top-level reshard copies, all trip-count
+    weighted by ``hlo_analysis.analyze``."""
+    cost = H.analyze(text, entry=hlo_entry)
+    return CollectiveAudit(
+        entry=entry,
+        counts={k: int(v) for k, v in cost.collective_count.items()},
+        bytes={k: float(v) for k, v in cost.collective_bytes_by_kind.items()},
+        reshard_copies=cost.copy_count,
+        reshard_copy_bytes=cost.copy_bytes)
+
+
+# ---------------------------------------------------------------------------
+# engine audit: lower the actual jitted entry points with their real
+# (placed) arguments and read the per-step collectives off the compiled HLO
+# ---------------------------------------------------------------------------
+
+def audit_engine(engine, *, n_slots: int, prompt_len: int,
+                 max_new_cap: int) -> Dict[str, CollectiveAudit]:
+    """Audits the serving engine's two jitted programs for the given decode
+    geometry: ``decode_step`` (one full step over all slots — the per-step
+    collective count) and ``prefill_into`` (one request splice).
+
+    The programs are lowered with the engine's *placed* parameter tree and
+    a freshly placed :class:`DecodeState` under the engine's ambient mesh,
+    so the compiled HLO is exactly what serving executes — collectives,
+    reshard copies, scan trip weighting and all. Works for both the plain
+    and the K-replica ensemble path (whichever the engine serves).
+    """
+    import jax.numpy as jnp
+
+    state = engine.init_decode(n_slots, prompt_len, max_new_cap)
+    tok = jnp.argmax(state.logits, axis=-1).reshape(n_slots, 1)
+    tok = tok.astype(jnp.int32)
+    prompt = jnp.zeros((1, prompt_len), jnp.int32)
+    slot = jnp.int32(0)
+    out: Dict[str, CollectiveAudit] = {}
+    with engine._mesh_ctx():
+        if engine._replicas is not None:
+            rs = engine._replicas
+            dec = engine._decode_ens.lower(
+                rs.stacked, rs.base, state.cache, tok).compile()
+            pre = engine._ens_prefill_into.lower(
+                rs.stacked, rs.base, state.cache, state.logits,
+                state.agreement, state.variance, prompt, slot,
+                state.context_len).compile()
+        else:
+            dec = engine._decode.lower(
+                engine.params, state.cache, tok).compile()
+            pre = engine._prefill_into.lower(
+                engine.params, state.cache, state.logits, prompt, slot,
+                state.context_len).compile()
+    out["decode_step"] = audit_hlo(dec.as_text(), entry="decode_step")
+    out["prefill_into"] = audit_hlo(pre.as_text(), entry="prefill_into")
+    return out
+
+
+def format_audit(audits: Dict[str, CollectiveAudit]) -> str:
+    """Aligned text table: entry | collective kind | count/step | bytes."""
+    rows = [("entry", "collective", "count/step", "operand bytes")]
+    for name in sorted(audits):
+        a = audits[name]
+        kinds = sorted(a.counts) or ["(none)"]
+        for k in kinds:
+            rows.append((name, k, str(a.counts.get(k, 0)),
+                         f"{a.bytes.get(k, 0.0):,.0f}"))
+        rows.append((name, "reshard-copy", str(a.reshard_copies),
+                     f"{a.reshard_copy_bytes:,.0f}"))
+    widths = [max(len(r[i]) for r in rows) for i in range(4)]
+    lines = ["  ".join(c.ljust(w) for c, w in zip(r, widths)).rstrip()
+             for r in rows]
+    lines.insert(1, "  ".join("-" * w for w in widths))
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# static per-row prediction for plan_report
+# ---------------------------------------------------------------------------
+
+def predict_row_collective(sharding: Optional[list], shape: tuple,
+                           batch: int = 8,
+                           axis_sizes: Optional[dict] = None
+                           ) -> Optional[dict]:
+    """What one plan row's sharding column *implies* per application:
+
+    * non-batch mesh axes on the out-channel (last) dim — Megatron column
+      parallelism: each device holds an N-shard of the output, so using the
+      full activation downstream needs an **all-gather** of the output;
+    * non-batch axes on the contraction (second-to-last) dim — row
+      parallelism: each device holds partial sums, so the output needs an
+      **all-reduce**.
+
+    ``bytes_per_app`` is the collective's operand size for one application
+    (``batch * N * ACT_BYTES``, the full output activation; wire bytes
+    depend on the algorithm and device count and are reported separately
+    by the measured audit). Returns None for unsharded / unannotated rows
+    and rows whose only sharded dims are batch axes. Note GSPMD often
+    *elides* the predicted collective — e.g. a column-parallel matmul
+    feeding a row-parallel one fuses into one all-reduce — which is exactly
+    why the measured ``audit_engine`` numbers, not this column, are the
+    golden-gated artifact.
+    """
+    if not sharding or len(shape) < 2:
+        return None
+    batch_names = ("data", "pod")
+
+    def model_axes(entry):
+        names = entry if isinstance(entry, (list, tuple)) else [entry]
+        return [a for a in names if a is not None and a not in batch_names]
+
+    n = shape[-1]
+    for dim, kind in ((len(shape) - 1, "all-gather"),
+                      (len(shape) - 2, "all-reduce")):
+        if dim < len(sharding):
+            axes = model_axes(sharding[dim])
+            if axes:
+                parts = None
+                if axis_sizes is not None:
+                    parts = 1
+                    for a in axes:
+                        parts *= int(axis_sizes.get(a, 1))
+                    if parts <= 1:
+                        return None
+                return {"kind": kind, "axes": axes, "parts": parts,
+                        "bytes_per_app": batch * n * ACT_BYTES}
+    return None

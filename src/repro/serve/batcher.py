@@ -65,7 +65,8 @@ class Request:
 
 
 class SlotBatcher:
-    def __init__(self, n_slots: int, prompt_len: int, pad_id: int = 0):
+    def __init__(self, n_slots: int, prompt_len: int, pad_id: int = 0,
+                 tracer=None):
         self.n_slots = n_slots
         self.prompt_len = prompt_len
         self.pad_id = pad_id
@@ -73,6 +74,13 @@ class SlotBatcher:
         self.slots: list[Optional[Request]] = [None] * n_slots
         self._uid = itertools.count()
         self.completed: list[Request] = []
+        # Optional repro.obs.Tracer: the request lifecycle (submit ->
+        # slot_refill -> request_done) lands as instant events on the same
+        # timeline as the engine's spans, so queue waits are visible in the
+        # trace. Disabled tracer = every call is a no-op.
+        if tracer is None:
+            from repro.obs.trace import NULL_TRACER as tracer
+        self.tracer = tracer
 
     def submit(self, prompt: np.ndarray, max_new: int) -> int:
         uid = next(self._uid)
@@ -88,6 +96,8 @@ class SlotBatcher:
                 [np.full(self.prompt_len - p.shape[0], self.pad_id, np.int32), p])
         self.queue.append(Request(uid, p, max_new, truncated=truncated,
                                   t_submit=time.perf_counter()))
+        self.tracer.instant("submit", uid=uid, max_new=max_new,
+                            queued=len(self.queue))
         return uid
 
     def refill(self) -> list[int]:
@@ -97,9 +107,13 @@ class SlotBatcher:
             if r is not None and r.done:
                 self.completed.append(r)
                 self.slots[i] = None
+                self.tracer.instant("request_done", uid=r.uid, slot=i,
+                                    tokens=len(r.generated))
             if self.slots[i] is None and self.queue:
                 self.slots[i] = self.queue.popleft()
                 changed.append(i)
+                self.tracer.instant("slot_refill", uid=self.slots[i].uid,
+                                    slot=i, queued=len(self.queue))
         return changed
 
     def active_mask(self) -> np.ndarray:

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import time
 from typing import Optional
 
 import jax
@@ -44,6 +45,7 @@ from repro.engine import compile_plan
 from repro.models import transformer as T
 from repro.models.layers import (PackedConv, PackedLinear, XnorConv,
                                  XnorLinear)
+from repro.obs.trace import NULL_TRACER
 
 
 def pack_params(params, policy, mode: str | BinarizeMode = "det",
@@ -185,10 +187,16 @@ class ServeEngine:
     """
 
     def __init__(self, cfg, params, sh=None, *, mesh=None, plan=None,
-                 ensemble=None, abstain_threshold: Optional[float] = None):
+                 ensemble=None, abstain_threshold: Optional[float] = None,
+                 tracer=None):
         self.cfg = cfg
         self.mesh = mesh
         self.abstain_threshold = abstain_threshold
+        # Observability (repro.obs): spans around every jitted entry point,
+        # with a dispatch/device split via block_until_ready fencing. The
+        # default NULL_TRACER makes every span site a no-op — in particular
+        # no fencing, so the async dispatch pipeline is untouched.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self._replicas = None
         if ensemble is not None:
             from repro.stoch import ReplicaSet
@@ -431,45 +439,61 @@ class ServeEngine:
         splice its cache + first-token logits into the live state at slot
         index ``slot``. One compiled program serves every slot (the index
         is a traced scalar; all shapes are static)."""
+        tr = self.tracer
         prompt = jnp.asarray(prompt, jnp.int32).reshape(1, state.prompt_len)
         if self._replicas is not None:
             rs = self._replicas
-            with self._mesh_ctx():
-                logits, agree, var, cache = self._ens_prefill_into(
-                    rs.stacked, rs.base, state.cache, state.logits,
-                    state.agreement, state.variance, prompt,
-                    jnp.int32(slot), state.context_len)
+            with tr.span("prefill_into", slot=slot), self._mesh_ctx():
+                with tr.span("dispatch"):
+                    logits, agree, var, cache = self._ens_prefill_into(
+                        rs.stacked, rs.base, state.cache, state.logits,
+                        state.agreement, state.variance, prompt,
+                        jnp.int32(slot), state.context_len)
+                with tr.span("device"):
+                    tr.fence(logits)
             return dataclasses.replace(state, cache=cache, logits=logits,
                                        agreement=agree, variance=var)
-        with self._mesh_ctx():
-            logits, cache = self._prefill_into(
-                self.params, state.cache, state.logits, prompt,
-                jnp.int32(slot), state.context_len)
+        with tr.span("prefill_into", slot=slot), self._mesh_ctx():
+            with tr.span("dispatch"):
+                logits, cache = self._prefill_into(
+                    self.params, state.cache, state.logits, prompt,
+                    jnp.int32(slot), state.context_len)
+            with tr.span("device"):
+                tr.fence(logits)
         return dataclasses.replace(state, cache=cache, logits=logits)
 
     def decode_step(self, state: DecodeState, tokens) -> DecodeState:
         """Advance every slot one token (single fixed-shape jitted call).
         ``tokens``: (n_slots,) int32 — the token just emitted per slot;
         inactive slots feed padding and their outputs are ignored."""
+        tr = self.tracer
         tokens = jnp.asarray(tokens, jnp.int32).reshape(state.n_slots, 1)
         if self._replicas is not None:
             rs = self._replicas
-            with self._mesh_ctx():
-                es, cache = self._decode_ens(rs.stacked, rs.base,
-                                             state.cache, tokens)
+            with tr.span("decode_step"), self._mesh_ctx():
+                with tr.span("dispatch"):
+                    es, cache = self._decode_ens(rs.stacked, rs.base,
+                                                 state.cache, tokens)
+                with tr.span("device"):
+                    tr.fence(es.mean_logits)
             return dataclasses.replace(
                 state, cache=cache,
                 logits=es.mean_logits.astype(state.logits.dtype),
                 agreement=es.agreement, variance=es.variance)
-        with self._mesh_ctx():
-            logits, cache = self._decode(self.params, state.cache, tokens)
+        with tr.span("decode_step"), self._mesh_ctx():
+            with tr.span("dispatch"):
+                logits, cache = self._decode(self.params, state.cache,
+                                             tokens)
+            with tr.span("device"):
+                tr.fence(logits)
         return dataclasses.replace(state, cache=cache, logits=logits)
 
 
 def stream_serve(engine: ServeEngine, batcher, *,
                  max_new_cap: Optional[int] = None,
                  temperature: float = 0.0,
-                 key: Optional[jax.Array] = None) -> int:
+                 key: Optional[jax.Array] = None,
+                 metrics=None) -> int:
     """Step-level continuous-batching serving loop.
 
     Each iteration: retire finished requests and re-prefill their slots
@@ -485,6 +509,16 @@ def stream_serve(engine: ServeEngine, batcher, *,
     ``max_new`` later raises. Returns the number of batched token-emission
     steps (the final emission needs no trailing decode_step, so the model
     runs ``steps - 1`` decode steps plus one prefill per request).
+
+    Observability: the engine's tracer (``ServeEngine(tracer=...)``) wraps
+    the whole loop in a ``stream_serve`` span with one ``step`` span per
+    iteration (``refill`` / ``sample`` / ``record`` children; the engine
+    adds ``prefill_into`` / ``decode_step`` with dispatch/device splits).
+    Pass ``metrics`` (a ``repro.obs.MetricsRegistry``) to record per-step
+    latency, queue depth and slot occupancy histograms, prefill/step/token
+    counters, the request-ledger TTFT/latency histograms, and a
+    ``serve_tok_per_s`` gauge — the numbers ``serve_bench`` and
+    ``launch.serve --metrics-out`` report.
     """
     if temperature > 0.0 and key is None:
         raise ValueError("temperature-sampled serving requires a PRNG key")
@@ -494,34 +528,89 @@ def stream_serve(engine: ServeEngine, batcher, *,
         if not pending:
             return 0
         cap = max(pending)
-    state = engine.init_decode(batcher.n_slots, batcher.prompt_len, cap)
+    tr = engine.tracer
+    step_h = queue_h = occ_h = None
+    if metrics is not None:
+        step_h = metrics.histogram("serve_step_seconds",
+                                   "wall seconds per serving-loop step")
+        queue_h = metrics.histogram("serve_queue_depth",
+                                    "queued requests, sampled per step")
+        occ_h = metrics.histogram("serve_slot_occupancy",
+                                  "active-slot fraction, sampled per step")
+    t_start = time.perf_counter()
     steps = 0
-    while True:
-        for slot in batcher.refill():
-            req = batcher.slots[slot]
-            if req.max_new > cap:
-                raise ValueError(
-                    f"request {req.uid} wants max_new={req.max_new} but the "
-                    f"decode state was sized for max_new_cap={cap}")
-            state = engine.prefill_into(state, slot, req.prompt)
-        if batcher.idle:
-            return steps
-        if temperature > 0.0:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(
-                sub, state.logits.astype(jnp.float32) / temperature, axis=-1)
-        else:
-            tok = jnp.argmax(state.logits, axis=-1)
-        if state.agreement is not None:
-            agr = np.asarray(state.agreement)
-            thr = engine.abstain_threshold
-            batcher.record(np.asarray(tok), agreement=agr,
-                           variance=np.asarray(state.variance),
-                           abstained=None if thr is None else agr < thr)
-        else:
-            batcher.record(np.asarray(tok))
-        steps += 1
-        if batcher.idle:
-            batcher.refill()   # flush the final completions; the trailing
-            return steps       # decode_step would be pure waste
-        state = engine.decode_step(state, tok)
+    with tr.span("stream_serve", n_slots=batcher.n_slots, cap=cap):
+        with tr.span("init_decode"):
+            state = engine.init_decode(batcher.n_slots, batcher.prompt_len,
+                                       cap)
+        try:
+            while True:
+                t_step = time.perf_counter()
+                with tr.span("step", step=steps):
+                    with tr.span("refill"):
+                        for slot in batcher.refill():
+                            req = batcher.slots[slot]
+                            if req.max_new > cap:
+                                raise ValueError(
+                                    f"request {req.uid} wants max_new="
+                                    f"{req.max_new} but the decode state was "
+                                    f"sized for max_new_cap={cap}")
+                            if metrics is not None:
+                                metrics.counter(
+                                    "serve_prefills_total",
+                                    "slot prefills (one per request "
+                                    "admitted)").inc()
+                            state = engine.prefill_into(state, slot,
+                                                        req.prompt)
+                    if metrics is not None:
+                        queue_h.observe(len(batcher.queue))
+                        occ_h.observe(
+                            float(np.mean(batcher.active_mask())))
+                    if batcher.idle:
+                        return steps
+                    with tr.span("sample"):
+                        if temperature > 0.0:
+                            key, sub = jax.random.split(key)
+                            tok = jax.random.categorical(
+                                sub,
+                                state.logits.astype(jnp.float32)
+                                / temperature, axis=-1)
+                        else:
+                            tok = jnp.argmax(state.logits, axis=-1)
+                        tok_host = np.asarray(tok)
+                    with tr.span("record"):
+                        if state.agreement is not None:
+                            agr = np.asarray(state.agreement)
+                            thr = engine.abstain_threshold
+                            batcher.record(
+                                tok_host, agreement=agr,
+                                variance=np.asarray(state.variance),
+                                abstained=None if thr is None
+                                else agr < thr)
+                        else:
+                            batcher.record(tok_host)
+                    steps += 1
+                    if metrics is not None:
+                        metrics.counter("serve_steps_total",
+                                        "token-emission steps").inc()
+                    if batcher.idle:
+                        # flush the final completions; the trailing
+                        # decode_step would be pure waste
+                        batcher.refill()
+                        if step_h is not None:
+                            step_h.observe(time.perf_counter() - t_step)
+                        return steps
+                    state = engine.decode_step(state, tok)
+                if step_h is not None:
+                    step_h.observe(time.perf_counter() - t_step)
+        finally:
+            if metrics is not None:
+                from repro.obs.metrics import record_request_metrics
+
+                record_request_metrics(metrics, batcher)
+                dt = time.perf_counter() - t_start
+                if dt > 0:
+                    metrics.gauge(
+                        "serve_tok_per_s",
+                        "recorded tokens / serving wall seconds").set(
+                        batcher.tokens_generated / dt)
