@@ -1,0 +1,13 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import sys, json
+sys.path.insert(0, "src"); sys.path.insert(0, ".")
+from benchmarks.check_collectives import _child
+res = _child()
+for mode in res:
+    for entry in res[mode]:
+        a = res[mode][entry]
+        print(mode, entry, "total", sum(a["counts"].values()), a["counts"],
+              "reshard", a["reshard_copies"])
+print("RESULT " + json.dumps(res))

@@ -1,0 +1,31 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import sys, re
+sys.path.insert(0, "src"); sys.path.insert(0, ".")
+import jax
+from benchmarks.check_collectives import (ARCH, MESH_SHAPE, MESH_AXES,
+                                          SLOTS, PROMPT_LEN, MAX_NEW_CAP)
+from repro.configs import base as cb
+from repro.core.policy import DEFAULT_POLICY
+from repro.engine import compile_plan
+from repro.models import transformer as T
+from repro.serve.engine import ServeEngine
+
+mode = sys.argv[1] if len(sys.argv) > 1 else "det"
+mesh = jax.make_mesh(MESH_SHAPE, MESH_AXES)
+cfg = cb.get_config(ARCH, smoke=True)
+params = T.init_lm(cfg, jax.random.key(0))
+plan = compile_plan(params, DEFAULT_POLICY, mode, warn=False, mesh=mesh)
+packed = plan.pack(params)
+eng = ServeEngine(cfg, packed, mesh=mesh, plan=plan)
+state = eng.init_decode(SLOTS, PROMPT_LEN, MAX_NEW_CAP)
+import jax.numpy as jnp
+tok = jnp.zeros((SLOTS, 1), jnp.int32)
+with eng._mesh_ctx():
+    txt = eng._decode.lower(eng.params, state.cache, tok).compile().as_text()
+open(f".scratch/decode_{mode}.hlo", "w").write(txt)
+for ln in txt.splitlines():
+    s = ln.strip()
+    if re.match(r"[%\w.-]+ = \S+ (all-gather|all-reduce|all-to-all|collective-permute)\(", s):
+        print(s.split(" metadata")[0][:240])

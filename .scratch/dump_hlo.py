@@ -1,0 +1,29 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import sys
+sys.path.insert(0, "/root/repo/src"); sys.path.insert(0, "/root/repo")
+import json
+import jax, jax.numpy as jnp
+from repro.configs import base as cb
+from repro.core.policy import DEFAULT_POLICY
+from repro.engine import compile_plan
+from repro.models import transformer as T
+from repro.obs.collectives import audit_engine, format_audit
+from repro.serve.engine import ServeEngine
+
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+cfg = cb.get_config("starcoder2_3b", smoke=True)
+params = T.init_lm(cfg, jax.random.key(0))
+mode = "det"
+plan = compile_plan(params, DEFAULT_POLICY, mode, warn=False, mesh=mesh)
+packed = plan.pack(params, key=jax.random.key(1))
+engine = ServeEngine(cfg, packed, mesh=mesh, plan=plan)
+state = engine.init_decode(4, 8, 8)
+tok = jnp.argmax(state.logits, axis=-1).reshape(4, 1).astype(jnp.int32)
+with engine._mesh_ctx():
+    dec = engine._decode.lower(engine.params, state.cache, tok).compile()
+text = dec.as_text()
+open("/root/repo/.scratch/decode_det.hlo", "w").write(text)
+audits = audit_engine(engine, n_slots=4, prompt_len=8, max_new_cap=8)
+print(format_audit(audits))

@@ -1,0 +1,38 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import sys, time
+sys.path.insert(0, "src")
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import base as cb
+from repro.core.policy import DEFAULT_POLICY
+from repro.engine import compile_plan
+from repro.models import transformer as T
+from repro.serve.engine import ServeEngine
+
+mesh = jax.make_mesh((1, 2), ("data", "model"))
+cfg = cb.get_config("starcoder2_3b", smoke=True)
+params = T.init_lm(cfg, jax.random.key(0))
+for mode in ("det", "xnor"):
+    plan = compile_plan(params, DEFAULT_POLICY, mode, warn=False, mesh=mesh)
+    packed = plan.pack(params, key=jax.random.key(1))
+    eng = ServeEngine(cfg, packed, mesh=mesh, plan=plan)
+    state = eng.init_decode(4, 8, 8)
+    state = eng.prefill_into(state, 0, np.arange(8))
+    tok = jnp.argmax(state.logits, axis=-1)
+    for i in range(4):
+        t0 = time.perf_counter()
+        state = eng.decode_step(state, tok)
+        jax.block_until_ready(state.logits)
+        print(f"{mode} call {i}: {(time.perf_counter()-t0)*1e3:.1f}ms "
+              f"tracing_cache={eng._decode._cache_size()}")
+        tok = jnp.argmax(state.logits, axis=-1)
+    # what sharding does the returned cache carry vs the placed one?
+    st0 = eng.init_decode(4, 8, 8)
+    for k in st0.cache:
+        s_in = st0.cache[k].sharding.spec
+        s_out = state.cache[k].sharding.spec
+        if s_in != s_out:
+            print(f"  {mode} cache[{k}]: in={s_in} out={s_out}")
+    if state.logits.sharding.spec != st0.logits.sharding.spec:
+        print(f"  {mode} logits: in={st0.logits.sharding.spec} out={state.logits.sharding.spec}")

@@ -1,0 +1,40 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import sys, time
+sys.path.insert(0, "src")
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import base as cb
+from repro.core.policy import DEFAULT_POLICY
+from repro.engine import compile_plan
+from repro.models import transformer as T
+from repro.serve.engine import ServeEngine
+
+mesh = jax.make_mesh((1, 2), ("data", "model"))
+cfg = cb.get_config("starcoder2_3b", smoke=True)
+params = T.init_lm(cfg, jax.random.key(0))
+for mode in ("det", "xnor"):
+    plan = compile_plan(params, DEFAULT_POLICY, mode, warn=False, mesh=mesh)
+    packed = plan.pack(params, key=jax.random.key(1))
+    for name, eng in [("single", ServeEngine(cfg, packed)),
+                      ("sharded", ServeEngine(cfg, packed, mesh=mesh, plan=plan))]:
+        state = eng.init_decode(4, 8, 8)
+        state = eng.prefill_into(state, 0, np.arange(8))
+        tok = jnp.argmax(state.logits, axis=-1)
+        state = eng.decode_step(state, tok)  # compile
+        jax.block_until_ready(state.logits)
+        t0 = time.perf_counter()
+        for _ in range(20):
+            tok = jnp.argmax(state.logits, axis=-1)
+            state = eng.decode_step(state, tok)
+        jax.block_until_ready(state.logits)
+        dt = (time.perf_counter() - t0) / 20
+        # chunked
+        st2, toks = eng.decode_steps(state, 4)   # compile
+        jax.block_until_ready(toks)
+        t0 = time.perf_counter()
+        for _ in range(5):
+            st2, toks = eng.decode_steps(st2, 4)
+        jax.block_until_ready(toks)
+        dtc = (time.perf_counter() - t0) / 20
+        print(f"{mode:5s} {name:8s} step={dt*1e3:7.2f}ms  chunked/step={dtc*1e3:7.2f}ms")

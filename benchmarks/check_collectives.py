@@ -93,6 +93,45 @@ def measured(timeout: int = 540) -> dict | None:
     return None
 
 
+# canonical category order for the mismatch table; anything else the audit
+# ever reports (e.g. a new collective kind from an XLA upgrade) is appended
+CATEGORIES = ("all-gather", "all-reduce", "all-to-all", "collective-permute")
+
+
+def _entry_table(mode: str, entry: str, w: dict, g: dict) -> list[str]:
+    """Per-category delta table for one drifted program: golden vs measured
+    count + operand bytes per collective kind, plus reshard copies and the
+    totals — the whole decode-step budget at a glance."""
+    kinds = list(CATEGORIES) + sorted(
+        (set(w.get("counts", {})) | set(g.get("counts", {})))
+        - set(CATEGORIES))
+
+    def row(name, wc, wb, gc, gb):
+        flag = "   " if (wc, wb) == (gc, gb) else " <-"
+        return (f"    {name:<20} {wc:>6} {wb:>12,.0f}   "
+                f"{gc:>6} {gb:>12,.0f}{flag}")
+
+    lines = [f"  {mode}/{entry}:",
+             f"    {'category':<20} {'golden':>6} {'bytes':>12}   "
+             f"{'measured':>6} {'bytes':>12}"]
+    for k in kinds:
+        lines.append(row(k, w.get("counts", {}).get(k, 0),
+                         w.get("bytes", {}).get(k, 0.0),
+                         g.get("counts", {}).get(k, 0),
+                         g.get("bytes", {}).get(k, 0.0)))
+    lines.append(row("reshard-copies",
+                     w.get("reshard_copies", 0),
+                     w.get("reshard_copy_bytes", 0.0),
+                     g.get("reshard_copies", 0),
+                     g.get("reshard_copy_bytes", 0.0)))
+    lines.append(row("total collectives",
+                     sum(w.get("counts", {}).values()),
+                     sum(w.get("bytes", {}).values()),
+                     sum(g.get("counts", {}).values()),
+                     sum(g.get("bytes", {}).values())))
+    return lines
+
+
 def _diff(want: dict, got: dict) -> list[str]:
     lines = []
     for mode in sorted(set(want) | set(got)):
@@ -105,17 +144,7 @@ def _diff(want: dict, got: dict) -> list[str]:
                 lines.append(f"  {mode}/{entry}: "
                              f"{'NEW' if w is None else 'MISSING'}")
                 continue
-            for field in ("counts", "bytes"):
-                kinds = sorted(set(w.get(field, {})) | set(g.get(field, {})))
-                for k in kinds:
-                    wv, gv = w.get(field, {}).get(k), g.get(field, {}).get(k)
-                    if wv != gv:
-                        lines.append(f"  {mode}/{entry}: {k} {field[:-1]} "
-                                     f"{wv!r} -> {gv!r}")
-            for key in ("reshard_copies", "reshard_copy_bytes"):
-                if w.get(key) != g.get(key):
-                    lines.append(f"  {mode}/{entry}: {key} "
-                                 f"{w.get(key)!r} -> {g.get(key)!r}")
+            lines.extend(_entry_table(mode, entry, w, g))
     return lines
 
 

@@ -66,12 +66,13 @@ def _submit_skewed(batcher, cfg, n: int, cap: int, n_long: int, short: int,
                        cap if i < n_long else short)
 
 
-def _run_step_loop(engine, batcher, cap: int,
-                   metrics=None) -> tuple[float, int, int]:
+def _run_step_loop(engine, batcher, cap: int, metrics=None,
+                   chunk: int = 1) -> tuple[float, int, int]:
     from repro.serve.engine import stream_serve
 
     t0 = time.perf_counter()
-    steps = stream_serve(engine, batcher, max_new_cap=cap, metrics=metrics)
+    steps = stream_serve(engine, batcher, max_new_cap=cap, metrics=metrics,
+                         decode_chunk=chunk)
     return time.perf_counter() - t0, steps, batcher.tokens_generated
 
 
@@ -128,20 +129,39 @@ def _staggered_loop(engine, cfg, slots: int, n: int, cap: int,
     return time.perf_counter() - t0, steps, batcher.tokens_generated
 
 
-def _sharded_child(modes: list[str], n: int, cap: int, slots: int) -> dict:
+def _sharded_child(modes: list[str], n: int, cap: int, slots: int,
+                   mesh_shape=(2, 2), widen: int = 1,
+                   chunk: int = 1) -> dict:
     """Runs inside the forced-multi-device subprocess: serve the same
-    workload through a single-device engine and a 2x2 mesh-sharded engine
-    per plan mode; returns tok/s for both (greedy tokens must agree)."""
+    workload through a single-device engine and a mesh-sharded engine per
+    plan mode; returns tok/s for both (greedy tokens must agree).
+
+    ``widen`` scales d_model / n_heads / d_ff by an integer factor (the
+    model-size sweep: where per-device compute grows, the fixed per-step
+    collective cost amortizes). Both engines stay *untraced* (the
+    ``NULL_TRACER`` default — no ``tracer.fence``): a fencing tracer
+    ``block_until_ready``'s every dispatch, serializing the async pipeline
+    and understating exactly the sharded rows this compares. The returned
+    ``manifest`` is this subprocess's own ``run_manifest`` — it, not the
+    parent, sees the forced device count and mesh shape."""
+    import dataclasses
+
+    from benchmarks.common import run_manifest
     from repro.configs import base as cb
     from repro.core.policy import DEFAULT_POLICY
     from repro.engine import compile_plan
     from repro.models import transformer as T
     from repro.serve.engine import ServeEngine
 
-    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    mesh = jax.make_mesh(tuple(mesh_shape), ("data", "model"))
     cfg = cb.get_config(ARCH, smoke=True)
+    if widen != 1:
+        cfg = dataclasses.replace(cfg, d_model=cfg.d_model * widen,
+                                  n_heads=cfg.n_heads * widen,
+                                  d_ff=cfg.d_ff * widen)
     params = T.init_lm(cfg, jax.random.key(0))
-    out = {}
+    out = {"manifest": run_manifest(mesh_shape=list(mesh_shape),
+                                    widen=widen, decode_chunk=chunk)}
     for mode in modes:
         plan = compile_plan(params, DEFAULT_POLICY, mode, warn=False,
                             mesh=mesh)
@@ -152,10 +172,10 @@ def _sharded_child(modes: list[str], n: int, cap: int, slots: int) -> dict:
         for name, eng in engines.items():
             b = _fresh_batcher(cfg, slots)          # warmup/compile
             _submit_skewed(b, cfg, slots, cap, slots, 0)
-            _run_step_loop(eng, b, cap)
+            _run_step_loop(eng, b, cap, chunk=chunk)
             b = _fresh_batcher(cfg, slots)
             _submit_skewed(b, cfg, n, cap, n, 0)
-            dt, steps, toks = _run_step_loop(eng, b, cap)
+            dt, steps, toks = _run_step_loop(eng, b, cap, chunk=chunk)
             out[f"{mode}_{name}"] = {"s": dt, "tokens": toks,
                                      "tok_s": toks / dt}
             tokens[name] = {r.uid: list(r.generated) for r in b.completed}
@@ -163,17 +183,19 @@ def _sharded_child(modes: list[str], n: int, cap: int, slots: int) -> dict:
     return out
 
 
-def _sharded_compare(modes: list[str], n: int, cap: int,
-                     slots: int) -> dict | None:
-    """Sharded-vs-single comparison, in a subprocess with 4 forced host
-    devices (device count is fixed at backend init, so the parent process
-    cannot grow one). Returns None if the child fails (e.g. no subprocess
-    support on the platform) — the suite keeps going."""
+def _sharded_compare(modes: list[str], n: int, cap: int, slots: int, *,
+                     devices: int = 4, mesh_shape=(2, 2), widen: int = 1,
+                     chunk: int = 1) -> dict | None:
+    """Sharded-vs-single comparison, in a subprocess with ``devices``
+    forced host devices (device count is fixed at backend init, so the
+    parent process cannot grow one). Returns None if the child fails (e.g.
+    no subprocess support on the platform) — the suite keeps going."""
     code = (f"import benchmarks.serve_bench as sb, json; "
             f"print('RESULT ' + json.dumps(sb._sharded_child("
-            f"{modes!r}, {n}, {cap}, {slots})))")
+            f"{modes!r}, {n}, {cap}, {slots}, {tuple(mesh_shape)!r}, "
+            f"{widen}, {chunk})))")
     env = dict(os.environ,
-               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
                JAX_PLATFORMS="cpu")
     env["PYTHONPATH"] = os.pathsep.join(
         [os.path.join(os.path.dirname(__file__), os.pardir, "src"),
@@ -283,23 +305,77 @@ def main(fast: bool = False):
                             f"tok/s={toks / dt:.1f}"))
 
     # -- mesh-sharded vs single-device (tensor-parallel plans) ------------
+    # Two sharded grids, each row a forced-device-count subprocess serving
+    # the identical workload through a single-device and a mesh-sharded
+    # engine (multi-step decode loop, decode_chunk=4):
+    #   * device-scaling curve: 1 / 2 / 4 devices at the base smoke width;
+    #   * model-size sweep: 4-device mesh at widen x {d_model, n_heads,
+    #     d_ff} — the per-step collective cost is fixed and activation-
+    #     sized, so the ratio improves as per-device compute grows.
+    # On a shared-core CPU host these are parity rows (every "device" is a
+    # timeslice of the same cores, so sharded pays the full collective +
+    # partitioning overhead with zero added FLOP throughput); on real
+    # multi-chip hardware the same rows are the scale-out claim.
     sh_modes = ["det"] if fast else ["det", "xnor"]
-    sh_n, sh_cap, sh_slots = (6, 6, 2) if fast else (8, 8, 4)
-    sharded = _sharded_compare(sh_modes, sh_n, sh_cap, sh_slots)
-    if sharded is not None:
-        record["sharded"] = sharded
+    sh_n, sh_cap, sh_slots = (6, 8, 2) if fast else (8, 16, 4)
+    sh_chunk = 4
+
+    def _row(tag, r, mode):
+        single = r[f"{mode}_single"]["tok_s"]
+        tp = r[f"{mode}_sharded"]["tok_s"]
+        rows.append(csv_row(
+            f"serve/{tag}_{mode}", 0.0,
+            f"single={single:.1f} sharded={tp:.1f} tok/s "
+            f"ratio={tp / single:.2f}x identical={r[f'{mode}_identical']}"))
+        return tp / single
+
+    ratios = {m: {} for m in sh_modes}
+    scaling = {}
+    curve = ([(4, (2, 2))] if fast
+             else [(1, (1, 1)), (2, (1, 2)), (4, (2, 2))])
+    for ndev, shape in curve:
+        r = _sharded_compare(sh_modes, sh_n, sh_cap, sh_slots,
+                             devices=ndev, mesh_shape=shape, chunk=sh_chunk)
+        if r is None:
+            continue
+        scaling[f"devices{ndev}"] = r
         for mode in sh_modes:
-            single = sharded[f"{mode}_single"]["tok_s"]
-            tp = sharded[f"{mode}_sharded"]["tok_s"]
-            same = sharded[f"{mode}_identical"]
-            rows.append(csv_row(
-                f"serve/sharded_vs_single_{mode}", 0.0,
-                f"single={single:.1f} sharded={tp:.1f} tok/s "
-                f"ratio={tp / single:.2f}x identical={same} "
-                f"(2x2 CPU mesh: parity row, not a speedup claim)"))
+            ratio = _row(f"sharded_devices{ndev}", r, mode)
+            if ndev == 4:
+                ratios[mode]["widen1"] = ratio
+    record["sharded_scaling"] = scaling
+
+    sweep = {}
+    for widen in ((2,) if fast else (2, 4)):
+        r = _sharded_compare(sh_modes, sh_n, sh_cap, sh_slots, devices=4,
+                             mesh_shape=(2, 2), widen=widen, chunk=sh_chunk)
+        if r is None:
+            continue
+        sweep[f"widen{widen}"] = r
+        for mode in sh_modes:
+            ratios[mode][f"widen{widen}"] = _row(
+                f"sharded_widen{widen}", r, mode)
+    record["sharded_widen"] = sweep
+
+    # ratio envelope + gate: the best sharded/single ratio per mode rides
+    # in the artifact's run_manifest (the envelope CI archives), and a
+    # GENEROUS floor turns a catastrophic collective regression (e.g. the
+    # decode step re-growing weight-sized gathers) into a red build without
+    # flaking on shared-core CI parity physics.
+    best = {m: max(v.values()) for m, v in ratios.items() if v}
+    record["sharded_ratio"] = ratios
+    for mode, r in sorted(best.items()):
+        rows.append(csv_row(f"serve/sharded_best_ratio_{mode}", 0.0,
+                            f"best_ratio={r:.2f}x (gate: >= 0.25)"))
 
     save_json("serve_bench", record,
-              mesh_shape=[2, 2] if sharded is not None else None)
+              mesh_shape=[2, 2] if scaling or sweep else None,
+              sharded_ratio_best=best or None)
+    if best and max(best.values()) < 0.25:
+        raise RuntimeError(
+            f"sharded/single tok/s best ratio {best} fell below the 0.25 "
+            f"floor — the decode step has likely re-grown weight-sized "
+            f"collectives (run benchmarks.check_collectives for the diff)")
     return rows
 
 

@@ -54,10 +54,20 @@ def mesh_context(mesh: Mesh):
 
 @dataclasses.dataclass
 class ShardCtx:
-    """Activation-sharding helper threaded through model code."""
+    """Activation-sharding helper threaded through model code.
+
+    ``decode=True`` selects the *serving* layout (``ServeEngine`` builds its
+    context this way): sequence parallelism is pointless on a one-token
+    stream (seq=1 cannot shard over "model" without padding permutes), so
+    the residual / attention activations replicate, the KV/SSM cache drops
+    its "model" axis (writes become device-local — no reshard copies), and
+    the per-projection all-gathers collapse to one collective per TP matmul
+    with a single deferred gather at the logits. See
+    docs/ARCHITECTURE.md §Decode-step collective budget."""
 
     mesh: Optional[Mesh] = None
     enable: bool = True
+    decode: bool = False
 
     def _p(self, *spec) -> Optional[P]:
         return P(*spec)
@@ -78,6 +88,7 @@ class ShardCtx:
             "btq": P(dp, None, "model"),       # (batch, seq, heads*hd)
             "bthd": P(dp, None, "model", None),# (batch, seq, heads, hd)
             "btv": P(dp, None, "model"),       # logits (vocab TP-sharded)
+            "bv": P(dp, None),                 # last-token logits, gathered
             "bte": P(dp, None, None),          # router logits (small)
             "ecd": P(None, dp, "model"),       # MoE buffer (E, cap, d)
             "ecf": P(None, dp, "model"),       # MoE hidden (E, cap, f)
@@ -90,6 +101,35 @@ class ShardCtx:
             "cache_kv": P(None, dp, "model", None, None),  # (L, B, S, kv, hd)
             "ssm_state": P(None, dp, "model", None, None), # (L, B, heads, hp, N)
         }
+        if self.decode:
+            specs.update({
+                # replicated residual/attention stream: attention internals
+                # (RoPE, cache write, softmax, PV einsum) run device-local
+                "btd": P(dp, None, None),
+                "btq": P(dp, None, None),
+                "bthd": P(dp, None, None, None),
+                # MLP hidden replicated too: the col-parallel up-projection
+                # all-gathers its (tiny) output so the down-projection
+                # contracts full-K locally — partial f32 sums behind an
+                # all-reduce could change summation order vs single device
+                # (the xnor row-parallel down-proj still all-reduces its
+                # *integer* popcount partials, which is exact)
+                "btf": P(dp, None, None),
+                # one all-gather right after the col-parallel qkv matmul
+                "qkv": P(dp, None, None),
+                # "btv" stays V-sharded (the base spec): pinning the logits
+                # dot's output replicated makes GSPMD all-gather the whole
+                # tied-embedding table (weight bytes) instead of the tiny
+                # (B, V) activation. The deferred gather is the separate
+                # "bv" constraint applied AFTER the head matmul
+                # (transformer._decode_head_out).
+                # cache entries keep "model" off every axis: updates are
+                # in-place local writes (donation-friendly, no reshards)
+                "cache_kv": P(None, dp),
+                "ssm_state": P(None, dp),
+            })
+        else:
+            specs["qkv"] = P(dp, None, "model")   # fused qkv projection out
         spec = specs.get(kind)
         if spec is None:
             return x
@@ -122,7 +162,15 @@ def _pspec_rules(fsdp: bool, dp_axes=("data",)):
         return build
 
     return [
-        (re.compile(r".*embed.*"), rule(-1, -2)),           # (V, D): TP on D? keep V
+        # (V, D): vocab-parallel (Megatron embedding). TP on V keeps BOTH
+        # tied-embedding consumers weight-stationary: the lookup is a
+        # masked local take + one small f32 all-reduce (exact — each output
+        # element is one shard's row + zeros), and the tied logits matmul
+        # w.T is col-parallel on V, so no device ever moves the (V, D)
+        # table. TP on D instead made GSPMD reshard+gather the whole table
+        # every decode step (measured: ~60% of decode-step collective
+        # bytes).
+        (re.compile(r".*embed.*"), rule(-2, -1)),
         (re.compile(r".*lm_head.*"), rule(-1, -2)),          # (D, V): vocab TP
         (re.compile(r".*(scale|gamma|beta|bias|A_log|dt_bias|D)$"), rule(None)),
         (re.compile(r".*router.*"), rule(None, -2)),
@@ -200,6 +248,30 @@ def _serving_leaf_types():
     return registry.serving_leaf_types()
 
 
+def backend_leaf_spec(path: str, master_ndim: int, backend_spec) -> Optional[P]:
+    """Master-shape PartitionSpec for a leaf owned by a registered backend.
+
+    A backend declaring ``tp_contract_dim`` opts its input-sharded
+    (Megatron row-parallel) projections — the leaves whose *path rule*
+    (:func:`leaf_pspec`) puts "model" on the contraction dim (w_o, wo,
+    w_down, out_proj) — into contraction sharding: the packed int32 *word*
+    dim splits over "model" (whole words only, so a 32-bit lane group still
+    never crosses a device) and GSPMD finishes the matmul with one
+    all-reduce of partial popcount sums instead of gathering and
+    re-scattering the activation at the packed/dense boundary. Everything
+    else falls back to the backend's out-channel ``tp_dim``. Returns None
+    when the backend declares neither (dense path rules apply)."""
+    cd = getattr(backend_spec, "tp_contract_dim", None)
+    if cd is not None and master_ndim >= 2:
+        mspec = leaf_pspec(path, master_ndim)
+        entries = list(mspec) + [None] * (master_ndim - len(mspec))
+        if entries[cd % master_ndim] == "model":
+            return tp_spec(cd, master_ndim)
+    if backend_spec.tp_dim is not None:
+        return tp_spec(backend_spec.tp_dim, master_ndim)
+    return None
+
+
 def serving_leaf_pspec(path: str, leaf) -> P:
     """PartitionSpec for one *serving-tree* leaf (plan-free fallback).
 
@@ -207,49 +279,60 @@ def serving_leaf_pspec(path: str, leaf) -> P:
     the built-ins: a serving leaf whose backend declares a ``tp_dim``
     shards that master dim over "model" (for the bitpacked built-ins, the
     out-channel / N dim — never the word (K//32) dim, so a 32-bit lane
-    group is never split across devices). Plain arrays, and serving leaves
-    whose backend declares no ``tp_dim``, follow the Megatron path rules
+    group is never split across devices), and a backend declaring
+    ``tp_contract_dim`` shards its row-parallel projections on the
+    contraction/word dim instead (:func:`backend_leaf_spec` — same rules
+    the plan compiler records). Plain arrays, and serving leaves whose
+    backend declares neither, follow the Megatron path rules
     (:func:`leaf_pspec`)."""
     from repro.engine import registry
 
     from repro.core.policy import is_conv_kernel
 
     spec = registry.spec_for_serving_leaf(leaf)
-    tp_dim = spec.tp_dim if spec is not None else None
-    if tp_dim is None and is_conv_kernel(path) and \
-            getattr(leaf, "ndim", 0) == 4:
+    if spec is not None:
+        shape = getattr(leaf, "master_shape", getattr(leaf, "shape", ()))
+        s = backend_leaf_spec(path, len(shape), spec)
+        if s is not None:
+            return s
+    elif is_conv_kernel(path) and getattr(leaf, "ndim", 0) == 4:
         # conv-stack kernels stay plain arrays under the binarized_dense
         # backend (and dense), so the registry cannot identify them by
         # type; TP-shard the out-channel dim like compile_plan records for
         # binarized_dense (a valid conv sharding for dense masters too)
-        tp_dim = -1
-    if tp_dim is not None:
-        shape = getattr(leaf, "master_shape", getattr(leaf, "shape", ()))
-        spec = tp_spec(tp_dim, len(shape))
-        if spec is not None:
-            return spec
+        s = tp_spec(-1, 4)
+        if s is not None:
+            return s
     return leaf_pspec(path, getattr(leaf, "ndim", 0))
 
 
 def _adapt_spec(spec: P, ndim: int) -> P:
-    """Fit a master-shape spec onto an array of rank ``ndim`` by keeping the
-    TRAILING entries (serving layouts collapse *leading* master dims: an
-    XnorConv packs (kh, kw, C, N) into 2-D (words, N), stacked linears keep
-    their lead dims). The out-channel dim is last in every layout, so the
-    trailing alignment preserves the TP assignment exactly."""
+    """Fit a master-shape spec onto an array of rank ``ndim`` by dropping
+    the second-to-last entry per excess rank (serving layouts collapse the
+    *contraction-side* master dims into the word dim, or omit them entirely:
+    an XnorConv packs (kh, kw, C, N) into 2-D (words, N); a PackedLinear's
+    per-channel scale drops the K dim, keeping (stack..., N)). The
+    out-channel dim is last in every layout, so this alignment keeps an
+    out-channel "model" on N and never leaks a row-parallel contraction
+    "model" onto a stack/scale dim."""
     entries = list(spec)
-    if len(entries) > ndim:
-        entries = entries[len(entries) - ndim:]
+    while len(entries) > max(ndim, 1):
+        entries.pop(-2)
+    if ndim == 0:
+        entries = []
     return P(*entries)
 
 
 def _place_serving_node(mesh: Mesh, spec: P, node, types=None):
     """device_put one plan row's serving node (packed leaf or plain array)
-    under its master-shape spec, rank-adapting to each stored array."""
+    under its master-shape spec, rank-adapting (and re-sanitizing — a word
+    dim can be non-divisible where its master dim was divisible) to each
+    stored array."""
     def put(a):
         if a is None or not hasattr(a, "ndim"):
             return a
         s = _adapt_spec(spec, a.ndim)
+        s = sanitize_spec(mesh, s, a.shape)
         return jax.device_put(a, NamedSharding(mesh, s))
 
     if isinstance(node, types if types is not None

@@ -284,7 +284,11 @@ XNOR = register_backend(BackendSpec(
     eligible=_xnor_eligible,
     pack=functools.partial(_pack_linear, XnorLinear), apply=_apply_xnor,
     cost=functools.partial(costs.gemm_cost, "xnor"),
-    tp_dim=-1,
+    # Row-parallel contraction sharding is exact for xnor: the partial
+    # popcount sums all-reduce in int32, so sharded streams stay
+    # bit-identical to single-device. The f32-accumulating packed backend
+    # deliberately does NOT set tp_contract_dim.
+    tp_dim=-1, tp_contract_dim=-2,
     doc="Fully-binary FC: binary weights AND sign-packed activations, "
         "XNOR-popcount dot (repro.xnor)."))
 

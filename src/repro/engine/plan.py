@@ -225,14 +225,17 @@ def _row_sharding(path: str, shape: tuple, backend: str, mesh) -> list:
     """The sharding column for one plan row: binary backends TP-shard their
     registered ``tp_dim`` (the N / out-channel dim — the packed int32 word
     dim is never split, so a 32-bit lane group never crosses a device
-    boundary); dense leaves follow the Megatron path rules. With a concrete
-    ``mesh``, axes the mesh cannot honour (missing name, non-divisible dim)
-    are dropped to replicated."""
+    boundary), except row-parallel projections of backends declaring a
+    ``tp_contract_dim``, which shard the contraction/word dim instead
+    (whole int32 words; one all-reduce of exact partial popcount sums —
+    see ``repro.distributed.sharding.backend_leaf_spec``); dense leaves
+    follow the Megatron path rules. With a concrete ``mesh``, axes the mesh
+    cannot honour (missing name, non-divisible dim) are dropped to
+    replicated."""
     from repro.distributed import sharding as SH
 
     ndim = len(shape)
-    tp_dim = registry.get_backend(backend).tp_dim
-    spec = SH.tp_spec(tp_dim, ndim) if tp_dim is not None else None
+    spec = SH.backend_leaf_spec(path, ndim, registry.get_backend(backend))
     if spec is None:
         spec = SH.leaf_pspec(path, ndim)
     if mesh is not None:

@@ -83,6 +83,16 @@ class BackendSpec:
     # dim; the plan compiler falls back to the Megatron path rules
     # (repro.distributed.sharding.leaf_pspec).
     tp_dim: Optional[int] = None
+    # Master-weight *contraction* dim this backend can shard over "model"
+    # for Megatron row-parallel projections (the leaves whose path rule
+    # puts "model" on the input dim: w_o / wo / w_down / out_proj). The
+    # packed word dim then splits as whole int32 words — a 32-bit lane
+    # group still never crosses a device — and the matmul finishes with
+    # one all-reduce of partial sums instead of an activation
+    # gather/re-scatter. Only exact-accumulation backends should set this:
+    # integer popcount partial sums all-reduce bit-exactly, while f32
+    # partial sums could change summation order vs a single device.
+    tp_contract_dim: Optional[int] = None
 
 
 _REGISTRY: dict[str, BackendSpec] = {}

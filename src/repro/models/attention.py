@@ -2,9 +2,12 @@
 
 Covers the assigned families: GQA (all LM archs), MHA (musicgen kv==heads),
 sliding-window (h2o-danube-3), QKV bias (qwen2.5), plus the decode path used
-by ``serve_step`` (single new token against a cached context; the cache is
-sharded batch-over-data and sequence-over-model — flash-decoding style — so
-XLA partitions the softmax reduction across chips).
+by ``serve_step`` (single new token against a cached context; under a
+serving ``ShardCtx`` the cache is sharded batch-over-data only — sequence
+replicated over "model" — so the per-step cache write, softmax and PV
+reduction all run device-local, and the block's cross-device traffic is one
+all-gather after the col-parallel qkv matmul plus one all-reduce for the
+row-parallel output projection).
 """
 from __future__ import annotations
 
@@ -147,7 +150,7 @@ def attention(cfg, params: dict, x: jax.Array, positions: jax.Array,
     out = out.reshape(x.shape[0], x.shape[1], cfg.q_dim)
     if sh is not None:
         out = sh.act(out, "btq")
-    return apply_linear(params["w_o"], out)
+    return apply_linear(params["w_o"], out, sh=sh, kind="btd")
 
 
 def attention_with_cache_write(cfg, params, x, positions, sh=None):
@@ -164,7 +167,7 @@ def attention_with_cache_write(cfg, params, x, positions, sh=None):
     ve = _repeat_kv(v, groups)
     out = _sdpa(cfg, q, ke, ve, x.shape[1])
     out = out.reshape(x.shape[0], x.shape[1], cfg.q_dim)
-    return apply_linear(params["w_o"], out), k, v
+    return apply_linear(params["w_o"], out, sh=sh, kind="btd"), k, v
 
 
 def decode_attention(cfg, params, x, k_cache, v_cache, pos, sh=None):
@@ -176,15 +179,26 @@ def decode_attention(cfg, params, x, k_cache, v_cache, pos, sh=None):
     Returns (out, k_cache, v_cache)."""
     b, _, _ = x.shape
     s_cache = k_cache.shape[1]
-    qkv = apply_linear(params["w_qkv"], x, params.get("b_qkv"))
+    # "qkv": under a decode ShardCtx this is the block's ONE gather — the
+    # col-parallel qkv matmul's output replicates here, so the split /
+    # RoPE / cache write / softmax / PV einsum below are all device-local
+    qkv = apply_linear(params["w_qkv"], x, params.get("b_qkv"),
+                       sh=sh, kind="qkv")
     q, k, v = _split_qkv(cfg, qkv)
     q = apply_rope(q, pos[:, None], cfg.rope_theta)
     k = apply_rope(k, pos[:, None], cfg.rope_theta)
 
     write_idx = pos % s_cache if cfg.sliding_window else jnp.minimum(pos, s_cache - 1)
-    bidx = jnp.arange(b)
-    k_cache = k_cache.at[bidx, write_idx].set(k[:, 0].astype(k_cache.dtype))
-    v_cache = v_cache.at[bidx, write_idx].set(v[:, 0].astype(v_cache.dtype))
+    # One-hot select instead of a batched scatter: GSPMD cannot partition a
+    # scatter whose index vector spans a sharded batch dim (it replicated
+    # the updates with a collective-permute + all-gather pair per cache,
+    # per layer, per step), while this jnp.where is elementwise — fully
+    # local under the slot-sharded serving cache layout. Selection is
+    # bit-exact (no arithmetic on cache values).
+    write_hot = (jnp.arange(s_cache)[None, :] == write_idx[:, None]
+                 )[:, :, None, None]                       # (B, S, 1, 1)
+    k_cache = jnp.where(write_hot, k[:, :1].astype(k_cache.dtype), k_cache)
+    v_cache = jnp.where(write_hot, v[:, :1].astype(v_cache.dtype), v_cache)
 
     # Grouped attention WITHOUT materializing the GQA-expanded cache
     # (a repeat would cost groups x the cache bytes — §Perf iteration 2):
@@ -206,7 +220,7 @@ def decode_attention(cfg, params, x, k_cache, v_cache, pos, sh=None):
     probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
     out = jnp.einsum("bngs,bsnd->bngd", probs, v_cache.astype(x.dtype))
     out = out.reshape(b, 1, cfg.q_dim)
-    return apply_linear(params["w_o"], out), k_cache, v_cache
+    return apply_linear(params["w_o"], out, sh=sh, kind="btd"), k_cache, v_cache
 
 
 def cache_length(cfg, seq_len: int) -> int:

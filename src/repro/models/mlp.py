@@ -32,7 +32,7 @@ def mlp(cfg, params: dict, x: jax.Array, sh=None) -> jax.Array:
         g = apply_linear(params["w_gate"], x, sh=sh, kind="btf")
         u = apply_linear(params["w_up"], x, sh=sh, kind="btf")
         h = jax.nn.silu(g) * u
-        return apply_linear(params["w_down"], h)
+        return apply_linear(params["w_down"], h, sh=sh, kind="btd")
     h = apply_linear(params["wi"], x, sh=sh, kind="btf")
     h = jax.nn.gelu(h)
-    return apply_linear(params["wo"], h)
+    return apply_linear(params["wo"], h, sh=sh, kind="btd")

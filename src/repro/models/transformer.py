@@ -139,6 +139,18 @@ def _head_out(cfg, params, x, sh):
     return sh.act(logits, "btv") if sh is not None else logits
 
 
+def _decode_head_out(cfg, params, x, sh):
+    """Decode head: col-parallel logits matmul + ONE deferred gather.
+
+    The "btv" constraint inside :func:`_head_out` keeps the dot's output
+    vocab-sharded (weight-stationary — pinning it replicated makes GSPMD
+    all-gather the whole tied-embedding table instead of the logits), and
+    the "bv" constraint here is the single small (B, V) gather the whole
+    decode step defers to."""
+    logits = _head_out(cfg, params, x, sh)[:, -1]
+    return sh.act(logits, "bv") if sh is not None else logits
+
+
 def forward(cfg, params, tokens_or_embeds, sh=None):
     """Full-sequence forward -> (logits, aux)."""
     x = _embed_in(cfg, params, tokens_or_embeds, sh)
@@ -273,30 +285,39 @@ def cache_slot_axes(cfg) -> dict[str, int]:
 
 def cache_pspecs(cfg, dp_axes=("data",)) -> dict:
     """PartitionSpec per decode-cache entry: slots (the continuous-batching
-    batch dim) shard over the data axes, attention KV sequence / SSM heads
-    shard over "model" (flash-decoding style, matching the ``cache_kv`` /
-    ``ssm_state`` activation kinds in ``repro.distributed.sharding``).
-    Keyed like :func:`cache_slot_axes`; used by ``ServeEngine.init_decode``
-    to place the persistent :class:`~repro.serve.engine.DecodeState` on a
-    mesh. ``dp_axes`` may be empty (a pure tensor-parallel mesh with no
-    data axis): slots then replicate and only "model" dims shard."""
+    batch dim) shard over the data axes; every other axis — in particular
+    the KV sequence — is *replicated* over "model" (matching the serving
+    ``cache_kv`` / ``ssm_state`` kinds of a ``decode=True``
+    ``repro.distributed.sharding.ShardCtx``). Replicating the sequence axis
+    trades per-device cache bytes for copy-free updates: the per-step
+    ``.at[slot, pos].set`` write and ``cache_insert`` splice are then
+    device-local scatters into a donated buffer, where the earlier
+    seq-over-"model" flash-decoding layout cost ~10 collectives + reshard
+    copies per decode step (measured in ``benchmarks/golden_plans/
+    collectives.json`` before/after — see docs/ARCHITECTURE.md §Decode-step
+    collective budget). Keyed like :func:`cache_slot_axes`; used by
+    ``ServeEngine.init_decode`` to place the persistent
+    :class:`~repro.serve.engine.DecodeState` on a mesh. ``dp_axes`` may be
+    empty (a pure tensor-parallel mesh with no data axis): the whole cache
+    then replicates. Specs shorter than an entry's rank replicate the
+    trailing dims."""
     from jax.sharding import PartitionSpec as P
 
     dp = (tuple(dp_axes) if len(dp_axes) > 1
           else dp_axes[0] if dp_axes else None)
     if cfg.family == "ssm":
         return {"pos": P(dp),
-                "ssm": P(None, dp, "model"),       # (L, B, H, hp, N)
-                "conv": P(None, dp, None, "model")}  # (L, B, w-1, conv_dim)
+                "ssm": P(None, dp),        # (L, B, H, hp, N)
+                "conv": P(None, dp)}       # (L, B, w-1, conv_dim)
     if cfg.is_hybrid:
         return {"pos": P(dp),
-                "k": P(None, dp, "model"),          # (n_per, B, S, kv, hd)
-                "v": P(None, dp, "model"),
-                "ssm": P(None, None, dp, "model"),  # (n_per, nm, B, H, ...)
-                "conv": P(None, None, dp, None, "model")}
+                "k": P(None, dp),          # (n_per, B, S, kv, hd)
+                "v": P(None, dp),
+                "ssm": P(None, None, dp),  # (n_per, nm, B, H, ...)
+                "conv": P(None, None, dp)}
     return {"pos": P(dp),
-            "k": P(None, dp, "model"),              # (L, B, S, kv, hd)
-            "v": P(None, dp, "model")}
+            "k": P(None, dp),              # (L, B, S, kv, hd)
+            "v": P(None, dp)}
 
 
 def cache_insert(cfg, cache: dict, one: dict, slot) -> dict:
@@ -341,7 +362,7 @@ def decode_step(cfg, params, cache: dict, tokens_or_embeds, sh=None):
         x, (new_ssm, new_conv) = jax.lax.scan(
             body, x, (params["layers"], cache["ssm"], cache["conv"]))
         new_cache = dict(cache, ssm=new_ssm, conv=new_conv, pos=pos + 1)
-        return _head_out(cfg, params, x, sh)[:, -1], new_cache
+        return _decode_head_out(cfg, params, x, sh), new_cache
 
     if cfg.is_hybrid:
         return _hybrid_decode(cfg, params, cache, x, sh)
@@ -361,7 +382,7 @@ def decode_step(cfg, params, cache: dict, tokens_or_embeds, sh=None):
     x, (new_k, new_v) = jax.lax.scan(
         body, x, (params["layers"], cache["k"], cache["v"]))
     new_cache = dict(cache, k=new_k, v=new_v, pos=pos + 1)
-    return _head_out(cfg, params, x, sh)[:, -1], new_cache
+    return _decode_head_out(cfg, params, x, sh), new_cache
 
 
 def _hybrid_decode(cfg, params, cache, x, sh):
@@ -400,7 +421,7 @@ def _hybrid_decode(cfg, params, cache, x, sh):
         body, x, (params["layers"], cache["k"], cache["v"],
                   cache["ssm"], cache["conv"]))
     new_cache = dict(cache, k=nk, v=nv, ssm=nst, conv=ncv, pos=pos + 1)
-    return _head_out(cfg, params, x, sh)[:, -1], new_cache
+    return _decode_head_out(cfg, params, x, sh), new_cache
 
 
 # ---------------------------------------------------------------------------

@@ -145,6 +145,17 @@ class SlotBatcher:
                 if r.done:
                     r.t_done = now
 
+    def min_remaining(self) -> Optional[int]:
+        """Smallest remaining-token budget among live slots (None when no
+        slot is active). The multi-step decode loop (``stream_serve``'s
+        ``decode_chunk``) sizes each on-device chunk to this, so no request
+        finishes strictly *inside* a chunk: completions land exactly on the
+        chunk boundary, where the refill runs — slot turnover timing (and
+        therefore every stream) is bit-identical to the one-token loop."""
+        rem = [r.max_new - len(r.generated)
+               for r in self.slots if r is not None and not r.done]
+        return min(rem) if rem else None
+
     @property
     def tokens_generated(self) -> int:
         """Tokens actually recorded so far (completed + in-flight). The

@@ -215,7 +215,12 @@ class ServeEngine:
                                                     place_packed_params)
 
             if sh is None:
-                sh = ShardCtx(mesh)
+                # decode=True: the serving activation layout — no sequence
+                # parallelism on the one-token stream, replicated residual,
+                # model-replicated cache (local in-place writes), one
+                # deferred logits gather. See ShardCtx and
+                # docs/ARCHITECTURE.md §Decode-step collective budget.
+                sh = ShardCtx(mesh, decode=True)
             if ensemble is not None:
                 from repro.stoch import place_replicas
 
@@ -233,14 +238,49 @@ class ServeEngine:
         self._prefill = jax.jit(
             lambda p, toks, ml: T.prefill(cfg, p, toks, sh, max_len=ml),
             static_argnums=2)
-        self._decode = jax.jit(
-            lambda p, cache, tok: T.decode_step(cfg, p, cache, tok, sh))
+        # The persistent cache is donated: the per-step KV write updates the
+        # long-lived buffer in place instead of copying the whole cache per
+        # token. Every caller (generate / decode_step / decode_steps)
+        # rebinds its state to the returned cache, so the consumed input
+        # buffer is never touched again. _pin_state pins the returned state
+        # to the init_decode placement: left unconstrained, GSPMD may pick a
+        # different output layout (e.g. xnor's row-parallel w_o propagates
+        # KV-heads-over-"model" onto the returned cache), which breaks the
+        # input==output sharding invariant donation relies on and retraces
+        # the jit into a slower steady-state program than the audited one.
+        def _decode_fn(p, cache, tok):
+            lg, cache = T.decode_step(cfg, p, cache, tok, sh)
+            cache, lg = self._pin_state(cache, lg)
+            return lg, cache
+
+        self._decode = jax.jit(_decode_fn, donate_argnums=(1,))
+
+        def _decode_chunk(p, cache, logits, d):
+            """d fixed-shape greedy decode steps under one lax.scan: emits
+            the argmax token per slot per step and leaves ``logits`` at the
+            next-token logits (the DecodeState invariant), so the serving
+            loop crosses the host boundary once per d tokens."""
+            def body(carry, _):
+                cache, logits = carry
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                lg, cache = T.decode_step(cfg, p, cache, tok[:, None], sh)
+                return (cache, lg.astype(logits.dtype)), tok
+
+            (cache, logits), toks = jax.lax.scan(
+                body, (cache, logits), None, length=d)
+            cache, logits = self._pin_state(cache, logits)
+            return cache, logits, jnp.moveaxis(toks, 0, 1)  # (n_slots, d)
+
+        self._decode_chunk = jax.jit(_decode_chunk, static_argnums=3,
+                                     donate_argnums=(1, 2))
 
         def _prefill_into(p, cache, logits, prompt, slot, ml):
             lg, one = T.prefill(cfg, p, prompt, sh, max_len=ml)
-            return (jax.lax.dynamic_update_slice_in_dim(
-                        logits, lg.astype(logits.dtype), slot, axis=0),
-                    T.cache_insert(cfg, cache, one, slot))
+            logits = jax.lax.dynamic_update_slice_in_dim(
+                logits, lg.astype(logits.dtype), slot, axis=0)
+            cache = T.cache_insert(cfg, cache, one, slot)
+            cache, logits = self._pin_state(cache, logits)
+            return logits, cache
 
         self._prefill_into = jax.jit(_prefill_into, static_argnums=5)
 
@@ -250,6 +290,47 @@ class ServeEngine:
         if ensemble is not None and ensemble.k > 1 and ensemble.stacked:
             self._replicas = ensemble
             self._build_ensemble_fns()
+
+    def _pin_state(self, cache, logits):
+        """Constrain a decode state (cache dict + next-token logits) to the
+        ``init_decode`` placement, inside a jit trace. Keeps every decode /
+        prefill_into output on the exact sharding the persistent buffers
+        were allocated with, so the steady-state program is the same one
+        the collective audit measured and donation never hits an
+        input/output sharding mismatch."""
+        if self.mesh is None:
+            return cache, logits
+        from jax.sharding import NamedSharding
+        from repro.distributed.sharding import batch_axes, sanitize_spec
+
+        pspecs = T.cache_pspecs(self.cfg, batch_axes(self.mesh))
+
+        def pin(a, spec):
+            spec = sanitize_spec(self.mesh, spec, a.shape)
+            return jax.lax.with_sharding_constraint(
+                a, NamedSharding(self.mesh, spec))
+
+        cache = {k: pin(v, pspecs[k]) for k, v in cache.items()}
+        return cache, pin(logits, pspecs["pos"])
+
+    def _pin_ens_cache(self, cache):
+        """Replica-axis variant of ``_pin_state`` for the K-stacked
+        ensemble cache (same placement ``init_decode`` uses)."""
+        if self.mesh is None:
+            return cache
+        from jax.sharding import NamedSharding
+        from repro.distributed.sharding import batch_axes, sanitize_spec
+        from repro.stoch.ensemble import prepend_replica_axis
+
+        ax = self._replicas.plan.replica_axis
+        pspecs = T.cache_pspecs(self.cfg, batch_axes(self.mesh))
+        out = {}
+        for k, v in cache.items():
+            spec = sanitize_spec(self.mesh,
+                                 prepend_replica_axis(ax, pspecs[k]), v.shape)
+            out[k] = jax.lax.with_sharding_constraint(
+                v, NamedSharding(self.mesh, spec))
+        return out
 
     def _build_ensemble_fns(self):
         """Jitted K-replica variants of prefill / decode / prefill_into:
@@ -277,9 +358,11 @@ class ServeEngine:
 
             rep_lg, cache = jax.vmap(one, in_axes=(0, 0),
                                      axis_size=k)(stacked, cache)
-            return ensemble_stats(rep_lg), cache
+            return ensemble_stats(rep_lg), self._pin_ens_cache(cache)
 
-        self._decode_ens = jax.jit(_ens_decode)
+        # same donation contract as the single-sample _decode: the
+        # K-replica cache updates in place, callers rebind their state
+        self._decode_ens = jax.jit(_ens_decode, donate_argnums=(2,))
 
         def _ens_prefill_into(stacked, base, cache, logits, agree, var,
                               prompt, slot, ml):
@@ -294,7 +377,8 @@ class ServeEngine:
             upd = jax.lax.dynamic_update_slice_in_dim
             return (upd(logits, es.mean_logits.astype(logits.dtype), slot, 0),
                     upd(agree, es.agreement, slot, 0),
-                    upd(var, es.variance, slot, 0), cache)
+                    upd(var, es.variance, slot, 0),
+                    self._pin_ens_cache(cache))
 
         self._ens_prefill_into = jax.jit(_ens_prefill_into, static_argnums=8)
 
@@ -488,12 +572,41 @@ class ServeEngine:
                 tr.fence(logits)
         return dataclasses.replace(state, cache=cache, logits=logits)
 
+    def decode_steps(self, state: DecodeState, d: int):
+        """Advance every slot ``d`` greedy tokens in ONE jitted call (a
+        fixed-shape ``lax.scan`` over ``d`` decode steps — argmax, decode,
+        repeat — with the cache and logits donated through the scan).
+        Returns ``(new_state, tokens)`` with ``tokens`` a (n_slots, d)
+        int32 *device* array: the caller decides when to cross the host
+        boundary (``jax.device_get``), so the steady-state serving loop
+        pays one transfer per ``d`` tokens instead of one per token.
+
+        Greedy only: temperature sampling threads a PRNG key per step and
+        stays on the one-step path. ``state.logits`` keeps the DecodeState
+        invariant (the not-yet-emitted next-token logits). Compiles one
+        program per distinct ``d``; ``stream_serve`` uses a fixed chunk
+        size clipped to the shortest live request, so at most
+        ``decode_chunk`` variants exist."""
+        if self._replicas is not None:
+            raise NotImplementedError(
+                "decode_steps is single-sample only; ensemble serving "
+                "decodes one step at a time (stream_serve falls back)")
+        tr = self.tracer
+        with tr.span("decode_steps", d=d), self._mesh_ctx():
+            with tr.span("dispatch"):
+                cache, logits, toks = self._decode_chunk(
+                    self.params, state.cache, state.logits, int(d))
+            with tr.span("device"):
+                tr.fence(logits)
+        return dataclasses.replace(state, cache=cache, logits=logits), toks
+
 
 def stream_serve(engine: ServeEngine, batcher, *,
                  max_new_cap: Optional[int] = None,
                  temperature: float = 0.0,
                  key: Optional[jax.Array] = None,
-                 metrics=None) -> int:
+                 metrics=None,
+                 decode_chunk: int = 1) -> int:
     """Step-level continuous-batching serving loop.
 
     Each iteration: retire finished requests and re-prefill their slots
@@ -509,6 +622,17 @@ def stream_serve(engine: ServeEngine, batcher, *,
     ``max_new`` later raises. Returns the number of batched token-emission
     steps (the final emission needs no trailing decode_step, so the model
     runs ``steps - 1`` decode steps plus one prefill per request).
+
+    ``decode_chunk > 1`` (greedy, non-ensemble serving only) switches the
+    steady state onto the multi-step inner loop: each iteration runs
+    ``d = min(decode_chunk, shortest live request's remaining budget)``
+    decode steps in ONE jitted call (``ServeEngine.decode_steps``) and
+    crosses the host boundary once per ``d`` tokens (a single explicit
+    ``jax.device_get``). Clipping ``d`` to ``batcher.min_remaining()``
+    keeps slot turnover on the chunk boundary, so refill timing — and
+    therefore every emitted stream — is bit-identical to ``decode_chunk=1``
+    (asserted in tests/test_distributed.py). Temperature sampling and
+    K-replica ensemble serving fall back to the one-step loop.
 
     Observability: the engine's tracer (``ServeEngine(tracer=...)``) wraps
     the whole loop in a ``stream_serve`` span with one ``step`` span per
@@ -539,6 +663,8 @@ def stream_serve(engine: ServeEngine, batcher, *,
                                   "active-slot fraction, sampled per step")
     t_start = time.perf_counter()
     steps = 0
+    use_chunks = (decode_chunk > 1 and temperature == 0.0
+                  and engine._replicas is None)
     with tr.span("stream_serve", n_slots=batcher.n_slots, cap=cap):
         with tr.span("init_decode"):
             state = engine.init_decode(batcher.n_slots, batcher.prompt_len,
@@ -568,6 +694,28 @@ def stream_serve(engine: ServeEngine, batcher, *,
                             float(np.mean(batcher.active_mask())))
                     if batcher.idle:
                         return steps
+                    if use_chunks:
+                        d = min(decode_chunk, batcher.min_remaining())
+                        with tr.span("chunk", d=d):
+                            state, toks = engine.decode_steps(state, d)
+                            # the chunk's ONE host crossing (explicit, so a
+                            # jax.transfer_guard around the steady state
+                            # stays silent — asserted in tests)
+                            tok_chunk = jax.device_get(toks)
+                        with tr.span("record"):
+                            for i in range(d):
+                                batcher.record(tok_chunk[:, i])
+                        steps += d
+                        if metrics is not None:
+                            metrics.counter("serve_steps_total",
+                                            "token-emission steps").inc(d)
+                        if batcher.idle:
+                            batcher.refill()
+                        if step_h is not None:
+                            step_h.observe(time.perf_counter() - t_step)
+                        if batcher.idle:
+                            return steps
+                        continue
                     with tr.span("sample"):
                         if temperature > 0.0:
                             key, sub = jax.random.split(key)

@@ -381,6 +381,56 @@ class TestMeshShardedServing:
         assert res["pos_spec"] == ["data"]
         assert res["tp_pos_replicated"]
 
+    def test_chunked_decode_bit_identical_sharded(self):
+        """The multi-step inner loop (``decode_chunk > 1``: d decode steps
+        under one lax.scan, one host crossing per chunk) emits streams
+        bit-identical to the single-step single-device loop for det AND
+        xnor on the 2x2 mesh, through a mid-stream slot refill (5 requests,
+        2 slots, mixed max_new — chunk clipping to ``min_remaining`` must
+        land every completion exactly on a chunk boundary)."""
+        out = _run("""
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+            import sys; sys.path.insert(0, "src")
+            import json
+            import jax, numpy as np
+            from repro.configs import base as cb
+            from repro.core.policy import DEFAULT_POLICY
+            from repro.engine import compile_plan
+            from repro.models import transformer as T
+            from repro.serve.batcher import SlotBatcher
+            from repro.serve.engine import ServeEngine, stream_serve
+
+            mesh = jax.make_mesh((2, 2), ("data", "model"))
+            cfg = cb.get_config("starcoder2_3b", smoke=True)
+            params = T.init_lm(cfg, jax.random.key(0))
+
+            def run(engine, chunk):
+                rng = np.random.default_rng(0)
+                b = SlotBatcher(2, 8)
+                for m in [3, 5, 2, 4, 3]:   # 5 requests > 2 slots: refill
+                    b.submit(rng.integers(0, cfg.vocab_size, 8), m)
+                steps = stream_serve(engine, b, decode_chunk=chunk)
+                return steps, {int(r.uid): list(map(int, r.generated))
+                               for r in b.completed}
+
+            res = {}
+            for mode in ("det", "xnor"):
+                plan = compile_plan(params, DEFAULT_POLICY, mode,
+                                    warn=False, mesh=mesh)
+                packed = plan.pack(params)
+                s1, single = run(ServeEngine(cfg, packed), 1)
+                eng = ServeEngine(cfg, packed, mesh=mesh, plan=plan)
+                s3, chunked = run(eng, 3)
+                res[mode] = {"identical": chunked == single,
+                             "same_steps": s1 == s3}
+            print(json.dumps(res))
+        """)
+        res = json.loads(out.strip().splitlines()[-1])
+        for mode in ("det", "xnor"):
+            assert res[mode]["identical"], mode
+            assert res[mode]["same_steps"], mode
+
     def test_ensemble_replica_axis_sharded_bit_identical(self):
         """Ensemble acceptance: K=4 stochastic replicas with the replica
         axis sharded over the plan's ``replica_axis`` column ("data" and
@@ -460,9 +510,11 @@ class TestMeshShardedServing:
         assert row.sharding == [None, None, "model"]
         from jax.sharding import PartitionSpec as P
         assert row.pspec == P(None, None, "model")
-        # dense leaves follow the Megatron rules (w_o is row-parallel only
-        # when dense; under packed it is out-channel like all bitpacked)
-        assert loaded["embed/embedding"].sharding == [None, "model"]
+        # dense leaves follow the Megatron rules (w_o is row-parallel when
+        # dense or xnor — exact integer partial sums — and out-channel
+        # under packed, whose f32 partials must not cross an all-reduce);
+        # the tied embedding is vocab-parallel: (V, D) sharded on V
+        assert loaded["embed/embedding"].sharding == ["model", None]
         assert loaded["layers/ln1/scale"].sharding == [None, None]
 
 

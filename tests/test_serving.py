@@ -146,6 +146,51 @@ class TestContinuousDecode:
                 np.asarray(by_uid[uid].generated),
                 np.asarray(one.tokens)[0], err_msg=f"request {uid}")
 
+    @pytest.mark.parametrize("arch", ["starcoder2_3b", "mamba2_130m"])
+    def test_chunked_stream_bit_identical(self, arch):
+        """``decode_chunk > 1`` (the multi-step on-device inner loop) emits
+        the same streams AND the same step count as the one-token loop:
+        clipping each chunk to ``batcher.min_remaining()`` keeps slot
+        turnover on chunk boundaries, so refill timing never diverges."""
+        cfg = cb.get_config(arch, smoke=True)
+        params = T.init_lm(cfg, jax.random.key(0))
+        engine = ServeEngine(cfg, params)
+
+        def run(chunk):
+            rng = np.random.default_rng(0)
+            b = SlotBatcher(n_slots=2, prompt_len=8)
+            for m in [3, 5, 2, 4, 3]:
+                b.submit(rng.integers(0, cfg.vocab_size, 8), m)
+            steps = stream_serve(engine, b, decode_chunk=chunk)
+            return steps, {r.uid: list(r.generated) for r in b.completed}
+
+        base = run(1)
+        for chunk in (3, 64):   # mid-request boundary; chunk > total budget
+            assert run(chunk) == base, f"decode_chunk={chunk}"
+
+    def test_chunked_steady_state_has_no_implicit_transfers(self):
+        """The whole point of the multi-step inner loop: a steady-state
+        chunk crosses the host boundary exactly once, via an *explicit*
+        ``jax.device_get`` of the token block. ``jax.transfer_guard
+        ("disallow")`` turns any implicit transfer inside the chunk into an
+        error, so this fails if a host round-trip sneaks back into the
+        decode path (a ``float(...)``, an ``np.asarray`` on logits, a
+        non-donated re-placement...)."""
+        cfg = cb.get_config("starcoder2_3b", smoke=True)
+        params = T.init_lm(cfg, jax.random.key(0))
+        engine = ServeEngine(cfg, params)
+        rng = np.random.default_rng(0)
+        state = engine.init_decode(2, 8, 8)
+        for s in (0, 1):  # prefill outside the guard: prompts are host data
+            state = engine.prefill_into(
+                state, s, rng.integers(0, cfg.vocab_size, 8))
+        with jax.transfer_guard("disallow"):
+            state, toks = engine.decode_steps(state, 4)
+            chunk = jax.device_get(toks)       # the ONE allowed crossing
+        assert chunk.shape == (2, 4)
+        # and the chunk really advanced the decode state
+        assert int(jax.device_get(state.cache["pos"])[0]) == 8 + 4
+
     def test_request_timing_ledger(self):
         cfg = cb.get_config("starcoder2_3b", smoke=True)
         params = T.init_lm(cfg, jax.random.key(0))
