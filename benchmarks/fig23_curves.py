@@ -12,7 +12,6 @@ and an ASCII sparkline summary.
 from __future__ import annotations
 
 import jax
-import numpy as np
 
 from repro.core import binarize as B
 from repro.core.policy import NONE_POLICY

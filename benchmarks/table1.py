@@ -21,8 +21,6 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core import binarize as B
 from repro.core import roofline as R

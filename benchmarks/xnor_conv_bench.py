@@ -18,7 +18,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import packing as wpack
 from repro.core import roofline as R
 from repro.xnor.conv import (conv_geometry, conv_k, pack_conv_kernel,
                              patch_nbytes_dense, patch_nbytes_packed,

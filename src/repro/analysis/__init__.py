@@ -1,0 +1,39 @@
+"""repro.analysis — static plan & HLO verifier.
+
+The BNN serving datapath's invariants are fixed at plan-compile/jit
+time; this package verifies them *before* (plan lints), *at* (compiled
+HLO lints), and *during* (retrace sentinel) serving:
+
+* :mod:`repro.analysis.plan_lints` — ExecutionPlan manifest rules
+  (``plan.*``): dense fallthrough, word-lane splits, unknown mesh axes,
+  replica-axis collisions, boundary reshards.
+* :mod:`repro.analysis.hlo_lints` — compiled-graph rules (``hlo.*``)
+  over the jitted ``decode_step``/``prefill_into``: f32 upcasts, cache
+  donation, host transfers, per-boundary collective-budget blame.
+* :mod:`repro.analysis.retrace` — the ``serve.retrace`` sentinel for
+  post-warmup jit recompiles during ``stream_serve``.
+
+Run it: ``python -m repro.analysis --all-goldens`` (the CI gate), or
+``--plan manifest.json``, or ``--live det --live xnor`` for the
+forced-4-device live-engine smoke. Rule catalogue: docs/ANALYSIS.md.
+"""
+from repro.analysis.findings import (ERROR, INFO, WARNING, Finding, errors,
+                                     findings_to_json, format_findings, gate,
+                                     waive)
+from repro.analysis.hlo_lints import (lint_cache_donation,
+                                      lint_collective_budget, lint_engine,
+                                      lint_f32_upcast, lint_hlo,
+                                      lint_host_transfer)
+from repro.analysis.plan_lints import (DEFAULT_MESH_AXES, lint_plan,
+                                       lint_plan_file)
+from repro.analysis.retrace import (DEFAULT_ALLOW, RetraceError,
+                                    RetraceSentinel)
+
+__all__ = [
+    "ERROR", "WARNING", "INFO", "Finding", "errors", "findings_to_json",
+    "format_findings", "gate", "waive",
+    "lint_plan", "lint_plan_file", "DEFAULT_MESH_AXES",
+    "lint_hlo", "lint_engine", "lint_f32_upcast", "lint_cache_donation",
+    "lint_host_transfer", "lint_collective_budget",
+    "RetraceSentinel", "RetraceError", "DEFAULT_ALLOW",
+]

@@ -1,0 +1,201 @@
+"""Compiled-graph lints over the engine's jitted serving programs.
+
+Plan lints (:mod:`repro.analysis.plan_lints`) check what the manifest
+*says*; these check what XLA actually *compiled* — the optimized,
+SPMD-partitioned HLO of ``decode_step`` / ``prefill_into`` as lowered by
+:func:`repro.obs.collectives.lower_serving_hlo`:
+
+``hlo.f32_upcast``
+    Large low-precision -> f32 ``convert`` ops inside the datapath
+    (trip-count weighted, byte-thresholded): a bf16/f16 weight or
+    activation tensor silently widened to f32 — the binary datapath's
+    whole advantage is *not* paying f32 bandwidth. Small converts
+    (scales, counters) are below the threshold by construction.
+
+``hlo.cache_not_donated``
+    The decode program declares no ``input_output_alias`` — the KV cache
+    is copied instead of donated, doubling decode HBM traffic. The
+    engine's ``_decode`` jits with ``donate_argnums=(1,)``; this catches
+    the aliasing being lost (a dtype/placement mismatch silently disables
+    donation).
+
+``hlo.host_transfer``
+    Host traffic ops (infeed / outfeed / send / recv) reachable from the
+    entry, trip-weighted: a host round-trip inside the decode loop
+    serializes every step on PCIe latency.
+
+``hlo.collective_budget``
+    Per-kind collective counts exceed a committed budget (e.g. the
+    ``benchmarks/golden_plans/collectives.json`` golden). The finding
+    carries the per-op blame table from
+    :func:`repro.obs.collectives.attribute_collectives`, so the *new*
+    collective is named by jaxpr path — per-boundary blame, not one
+    global diff.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Mapping, Optional
+
+from repro.analysis.findings import ERROR, WARNING, Finding
+from repro.core import hlo_analysis as H
+from repro.obs.collectives import attribute_collectives, audit_hlo
+
+#: Ignore converts below this many operand bytes (trip-weighted): scale
+#: vectors, loop counters, and index math legitimately widen.
+F32_UPCAST_MIN_BYTES = 65536
+
+#: Low-precision source dtypes whose widening to f32 the lint flags.
+_NARROW = ("bf16", "f16")
+
+_HOST_OPS = ("infeed", "outfeed", "send", "recv", "send-done", "recv-done")
+
+
+def _operand_dtype(op: H.HloOp, comp: H.HloComputation) -> str:
+    if op.operands:
+        src = comp.ops.get(op.operands[0])
+        if src is not None:
+            dtype, _ = H._shape_dims(src.shape)
+            return dtype
+    return ""
+
+
+def lint_f32_upcast(text: str, entry: str = "program", *,
+                    min_bytes: int = F32_UPCAST_MIN_BYTES) -> List[Finding]:
+    """hlo.f32_upcast — large narrow-float -> f32 converts."""
+    comps = H.parse_hlo(text)
+    offenders: List[dict] = []
+    total = 0.0
+    for visit in H.iter_ops(text):
+        op = visit.op
+        if op.opcode != "convert":
+            continue
+        dtype, _ = H._shape_dims(op.shape)
+        if dtype != "f32":
+            continue
+        src_dtype = _operand_dtype(op, comps[visit.computation])
+        if src_dtype not in _NARROW:
+            continue
+        b = visit.mult * H.shape_bytes(op.shape)
+        if b < min_bytes:
+            continue
+        total += b
+        offenders.append({"op": op.name, "from": src_dtype,
+                          "op_name": H.op_metadata_name(op),
+                          "bytes_per_step": b})
+    if not offenders:
+        return []
+    offenders.sort(key=lambda r: -r["bytes_per_step"])
+    top = offenders[0]
+    return [Finding(
+        rule="hlo.f32_upcast", severity=WARNING, where=entry,
+        message=(f"{len(offenders)} {'/'.join(_NARROW)}->f32 convert(s) "
+                 f"of >= {min_bytes} bytes inside {entry} "
+                 f"({total:,.0f} bytes/step; largest: {top['op']} "
+                 f"{top['bytes_per_step']:,.0f}B at "
+                 f"{top['op_name'] or '<no metadata>'})"),
+        hint=("keep the binary datapath in its storage dtype; if the "
+              "widening is a deliberate accumulation, waive this rule or "
+              "raise min_bytes"),
+        data={"offenders": offenders[:8], "total_bytes_per_step": total})]
+
+
+def lint_cache_donation(text: str, entry: str = "decode_step"
+                        ) -> List[Finding]:
+    """hlo.cache_not_donated — decode program without input/output
+    aliasing (the KV cache is copied every step)."""
+    aliases = H.input_output_aliases(text)
+    if aliases:
+        return []
+    return [Finding(
+        rule="hlo.cache_not_donated", severity=ERROR, where=entry,
+        message=(f"{entry} compiled with no input_output_alias — the KV "
+                 f"cache is copied, not donated, doubling decode HBM "
+                 f"traffic"),
+        hint=("jit with donate_argnums covering the cache and keep the "
+              "passed-in state's dtype/sharding identical to the output "
+              "(a mismatch silently disables donation)"),
+        data={})]
+
+
+def lint_host_transfer(text: str, entry: str = "program") -> List[Finding]:
+    """hlo.host_transfer — host traffic ops reachable from the entry."""
+    hits: List[dict] = []
+    for visit in H.iter_ops(text):
+        if visit.op.opcode in _HOST_OPS:
+            hits.append({"op": visit.op.name, "opcode": visit.op.opcode,
+                         "trips": visit.mult,
+                         "op_name": H.op_metadata_name(visit.op)})
+    if not hits:
+        return []
+    return [Finding(
+        rule="hlo.host_transfer", severity=ERROR, where=entry,
+        message=(f"{len(hits)} host-transfer op(s) inside {entry} "
+                 f"({', '.join(sorted({h['opcode'] for h in hits}))}) — "
+                 f"every decode step would block on host round-trips"),
+        hint=("keep the decode loop on device: no io_callback/debug "
+              "prints/host polling inside jitted serving entries"),
+        data={"ops": hits[:8]})]
+
+
+def lint_collective_budget(text: str, entry: str,
+                           budget: Mapping[str, int]) -> List[Finding]:
+    """hlo.collective_budget — measured per-kind counts vs a committed
+    budget, with per-op jaxpr-path blame for the overage."""
+    audit = audit_hlo(text, entry=entry)
+    over = {k: (int(audit.counts.get(k, 0)), int(budget.get(k, 0)))
+            for k in set(audit.counts) | set(budget)
+            if int(audit.counts.get(k, 0)) > int(budget.get(k, 0))}
+    if not over:
+        return []
+    blame = attribute_collectives(text)
+    blamed = sorted((r for r in blame if r["kind"] in over),
+                    key=lambda r: -r["bytes_per_step"])
+    detail = "; ".join(f"{k}: {got} > budget {want}"
+                       for k, (got, want) in sorted(over.items()))
+    names = [r["op_name"] or r["op"] for r in blamed[:4]]
+    return [Finding(
+        rule="hlo.collective_budget", severity=ERROR, where=entry,
+        message=(f"{entry} exceeds its collective budget ({detail}); "
+                 f"over-budget kinds come from: {', '.join(names)}"),
+        hint=("review the blame table in data.blame — if the new "
+              "collective is intentional, regenerate the golden "
+              "(python -m benchmarks.check_collectives --write)"),
+        data={"over": {k: {"measured": g, "budget": w}
+                       for k, (g, w) in over.items()},
+              "blame": blamed[:16]})]
+
+
+def lint_hlo(text: str, entry: str = "program", *,
+             budget: Optional[Mapping[str, int]] = None,
+             require_donation: bool = False,
+             min_upcast_bytes: int = F32_UPCAST_MIN_BYTES) -> List[Finding]:
+    """All compiled-graph lints over one program's HLO text."""
+    findings: List[Finding] = []
+    findings += lint_f32_upcast(text, entry, min_bytes=min_upcast_bytes)
+    if require_donation:
+        findings += lint_cache_donation(text, entry)
+    findings += lint_host_transfer(text, entry)
+    if budget is not None:
+        findings += lint_collective_budget(text, entry, budget)
+    return findings
+
+
+def lint_engine(engine: Any, *, n_slots: int, prompt_len: int,
+                max_new_cap: int,
+                budgets: Optional[Mapping[str, Mapping[str, int]]] = None
+                ) -> List[Finding]:
+    """Lower the engine's serving programs and lint both: donation is
+    required of ``decode_step`` (the engine donates its cache there);
+    ``budgets`` maps entry name -> per-kind collective budget."""
+    from repro.obs.collectives import lower_serving_hlo
+
+    texts = lower_serving_hlo(engine, n_slots=n_slots,
+                              prompt_len=prompt_len,
+                              max_new_cap=max_new_cap)
+    findings: List[Finding] = []
+    for name, text in texts.items():
+        findings += lint_hlo(
+            text, entry=name,
+            budget=(budgets or {}).get(name),
+            require_donation=(name == "decode_step"))
+    return findings

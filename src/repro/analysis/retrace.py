@@ -1,0 +1,120 @@
+"""Retrace sentinel: fail serving when a post-warmup step recompiles.
+
+The class of bug that silently serialized sharded decode before PR 8:
+``decode_step`` returned state whose placement differed from what the
+next call expected, so every step retraced into a fresh (and far slower)
+program — no error, no wrong answer, just a 10x throughput cliff. The
+sentinel watches the jit caches of the engine's entry points during
+``stream_serve`` (``engine.jit_entries()``) and records every cache-size
+growth after the warmup steps; ``decode_chunk`` is allowlisted by default
+because it legitimately compiles one program per distinct chunk length.
+
+Usage::
+
+    sentinel = RetraceSentinel(engine)
+    stream_serve(engine, batcher, sentinel=sentinel)
+    assert sentinel.ok, sentinel.summary()
+
+or ``strict=True`` to raise :class:`RetraceError` at the offending step.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Mapping, Optional, Sequence
+
+from repro.analysis.findings import ERROR, Finding
+
+#: Entries allowed to compile after warmup: ``decode_chunk`` jits one
+#: program per distinct static chunk length ``d`` by design.
+DEFAULT_ALLOW = ("decode_chunk",)
+
+
+class RetraceError(RuntimeError):
+    """A post-warmup serving step recompiled a jitted entry."""
+
+
+class RetraceSentinel:
+    """Records jit cache misses across serving steps.
+
+    ``entries`` maps name -> jitted callable; defaults to
+    ``engine.jit_entries()``. Entries whose jit wrapper does not expose a
+    cache size (foreign callables) are ignored. ``warmup_steps`` is the
+    number of leading loop iterations whose compiles are expected (first
+    prefill + first decode); every later growth in a non-allowlisted
+    entry becomes an event (and a ``serve.retrace`` Finding), or raises
+    immediately with ``strict=True``."""
+
+    def __init__(self, engine: Any = None,
+                 entries: Optional[Mapping] = None,
+                 *, warmup_steps: int = 1,
+                 allow: Sequence[str] = DEFAULT_ALLOW,
+                 strict: bool = False) -> None:
+        if entries is None:
+            if engine is None:
+                raise ValueError("RetraceSentinel needs an engine or an "
+                                 "explicit entries mapping")
+            entries = engine.jit_entries()
+        self._entries = {name: fn for name, fn in dict(entries).items()
+                         if hasattr(fn, "_cache_size")}
+        self.warmup_steps = int(warmup_steps)
+        self.allow = frozenset(allow)
+        self.strict = bool(strict)
+        self.steps = 0
+        self.events: List[Dict] = []
+        self._baseline: Optional[Dict[str, int]] = None
+
+    def sizes(self) -> Dict[str, int]:
+        """Current jit cache size per watched entry."""
+        return {name: int(fn._cache_size())
+                for name, fn in self._entries.items()}
+
+    def step(self) -> None:
+        """Called once per serving-loop iteration (after its decode)."""
+        self.steps += 1
+        sizes = self.sizes()
+        if self._baseline is None or self.steps <= self.warmup_steps:
+            self._baseline = sizes
+            return
+        for name, size in sizes.items():
+            before = self._baseline.get(name, 0)
+            if size <= before:
+                continue
+            self._baseline[name] = size
+            if name in self.allow:
+                continue
+            event = {"step": self.steps, "entry": name,
+                     "cache_before": before, "cache_after": size}
+            self.events.append(event)
+            if self.strict:
+                raise RetraceError(
+                    f"serving step {self.steps} recompiled jitted entry "
+                    f"{name!r} (jit cache {before} -> {size}) after "
+                    f"{self.warmup_steps} warmup step(s) — a shape, "
+                    f"dtype, or placement changed mid-stream")
+
+    @property
+    def ok(self) -> bool:
+        return not self.events
+
+    def findings(self) -> List[Finding]:
+        return [Finding(
+            rule="serve.retrace", severity=ERROR,
+            where=f"{e['entry']}@step{e['step']}",
+            message=(f"post-warmup recompile of {e['entry']!r} at serving "
+                     f"step {e['step']} (jit cache {e['cache_before']} -> "
+                     f"{e['cache_after']})"),
+            hint=("something about the call changed mid-stream — check "
+                  "that decode_step returns state pinned to the "
+                  "init_decode placement and that prompt/token shapes "
+                  "are fixed"),
+            data=dict(e)) for e in self.events]
+
+    def summary(self) -> str:
+        if self.ok:
+            caches = ", ".join(f"{n}:{s}"
+                               for n, s in sorted(self.sizes().items()))
+            return (f"retrace sentinel: {self.steps} step(s), "
+                    f"0 post-warmup recompiles ({caches})")
+        where = "; ".join(f"{e['entry']}@step{e['step']}"
+                          for e in self.events)
+        return (f"retrace sentinel: {len(self.events)} post-warmup "
+                f"recompile(s) in {self.steps} step(s): {where}")

@@ -28,7 +28,7 @@ from __future__ import annotations
 import dataclasses
 import re
 from collections import defaultdict
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 _DTYPE_BYTES = {
     "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
@@ -279,18 +279,22 @@ def _operand_bytes(op: HloOp, comp: HloComputation) -> int:
     return total
 
 
+def _entry_name(comps: Dict[str, HloComputation]) -> str:
+    """ENTRY computation: the one never called by others."""
+    called = set()
+    for c in comps.values():
+        for op in c.ops.values():
+            called.update(op.called)
+    roots = [n for n in comps if n not in called]
+    return roots[-1] if roots else next(iter(comps))
+
+
 def analyze(text: str, entry: Optional[str] = None) -> HloCost:
     comps = parse_hlo(text)
     if not comps:
         return HloCost()
     if entry is None:
-        # ENTRY computation: the one never called by others.
-        called = set()
-        for c in comps.values():
-            for op in c.ops.values():
-                called.update(op.called)
-        roots = [n for n in comps if n not in called]
-        entry = roots[-1] if roots else next(iter(comps))
+        entry = _entry_name(comps)
     cost = HloCost()
     _walk(comps, comps[entry], 1.0, cost, depth=0, in_fusion=False)
     return cost
@@ -376,6 +380,104 @@ def _walk(comps: Dict[str, HloComputation], comp: HloComputation,
                 cost.bytes += mult * 2 * upd_b
             else:
                 cost.bytes += mult * (shape_bytes(op.shape) + _operand_bytes(op, comp))
+
+
+# ---------------------------------------------------------------------------
+# trip-weighted op iteration + module-header facts (used by repro.analysis)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class OpVisit:
+    """One op reached from the entry computation, with the product of
+    enclosing while trip counts (``mult``) — the same attribution
+    :func:`analyze` uses, exposed as a walk instead of a sum."""
+    op: HloOp
+    mult: float
+    computation: str
+    in_fusion: bool
+
+
+def iter_ops(text: str, entry: Optional[str] = None) -> Iterator[OpVisit]:
+    """Yields every op reachable from ``entry`` (default: the ENTRY
+    computation), trip-count weighted, descending into while bodies,
+    conditional branches, calls, and fusions (``in_fusion=True`` inside)."""
+    comps = parse_hlo(text)
+    if not comps:
+        return
+    if entry is None:
+        entry = _entry_name(comps)
+    yield from _iter_comp(comps, comps[entry], 1.0, 0, False)
+
+
+def _iter_comp(comps: Dict[str, HloComputation], comp: HloComputation,
+               mult: float, depth: int, in_fusion: bool) -> Iterator[OpVisit]:
+    if depth > 40:  # pathological recursion guard (mirrors _walk)
+        return
+    for name in comp.order:
+        op = comp.ops[name]
+        yield OpVisit(op, mult, comp.name, in_fusion)
+        oc = op.opcode
+        if oc == "while":
+            m_body = re.search(r"body=%?([\w.\-]+)", op.raw)
+            m_cond = re.search(r"condition=%?([\w.\-]+)", op.raw)
+            body = comps.get(m_body.group(1)) if m_body else None
+            cond = comps.get(m_cond.group(1)) if m_cond else None
+            trips = while_trip_count(cond) if cond is not None else None
+            if body is not None:
+                yield from _iter_comp(comps, body, mult * (trips or 1),
+                                      depth + 1, in_fusion)
+        elif oc == "fusion":
+            for c in op.called:
+                sub = comps.get(c)
+                if sub is not None:
+                    yield from _iter_comp(comps, sub, mult, depth + 1, True)
+        elif oc in ("conditional", "call", "async-start", "async-done",
+                    "custom-call"):
+            for c in op.called:
+                sub = comps.get(c)
+                if sub is not None:
+                    yield from _iter_comp(comps, sub, mult, depth + 1,
+                                          in_fusion)
+
+
+_ALIAS_ENTRY = re.compile(
+    r"\{([0-9,\s]*)\}:\s*\((\d+),\s*\{[0-9,\s]*\},\s*([\w\-]+)\)")
+
+
+def input_output_aliases(text: str) -> List[Tuple[Tuple[int, ...], int, str]]:
+    """Donation facts from the ``HloModule`` header's
+    ``input_output_alias={ {1}: (13, {}, may-alias), ... }`` attribute:
+    a list of (output tuple index, parameter number, alias kind). Empty
+    when the module declares no aliasing — i.e. nothing was donated."""
+    start = text.find("input_output_alias={")
+    if start < 0:
+        return []
+    i = start + len("input_output_alias={")
+    depth = 1
+    while i < len(text) and depth:
+        if text[i] == "{":
+            depth += 1
+        elif text[i] == "}":
+            depth -= 1
+        i += 1
+    block = text[start:i]
+    out = []
+    for m in _ALIAS_ENTRY.finditer(block):
+        idx = tuple(int(x) for x in m.group(1).replace(" ", "").split(",")
+                    if x)
+        out.append((idx, int(m.group(2)), m.group(3)))
+    return out
+
+
+_OP_NAME = re.compile(r'op_name="([^"]*)"')
+
+
+def op_metadata_name(op: HloOp) -> str:
+    """The ``metadata={op_name="..."}`` source attribution of one op
+    (empty string when absent) — the jaxpr path XLA recorded, e.g.
+    ``jit(_decode_fn)/while/body/jit(_xnor_matmul_packed)/reduce_sum``."""
+    m = _OP_NAME.search(op.raw)
+    return m.group(1) if m else ""
 
 
 def collective_summary(text: str) -> Dict[str, Tuple[int, float]]:

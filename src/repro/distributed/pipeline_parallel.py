@@ -15,12 +15,11 @@ internvl2 / 72-layer jamba) where TP collectives saturate before compute.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 # jax.shard_map graduated from jax.experimental around 0.6; support both.
 _shard_map = getattr(jax, "shard_map", None)

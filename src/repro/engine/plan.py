@@ -29,7 +29,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import warnings
-from typing import Any, Mapping, Optional
+from typing import Mapping, Optional
 
 import jax
 
@@ -123,6 +123,42 @@ class ExecutionPlan:
         if self.mode != "stoch":
             return []
         return [a for a in self.layers if a.backend != "dense"]
+
+    #: Leaf basenames that are elementwise parameters, not projections —
+    #: stacked (L, D) norm scales/biases clear ndim >= 2 but are never
+    #: matmul applications.
+    _ELEMENTWISE = ("scale", "bias", "b", "beta", "gamma")
+
+    def compute_rows(self) -> list[LayerAssignment]:
+        """Rows that are matmul/conv applications (ndim >= 2) — the ones
+        whose sharding column implies collectives; scales/biases/norms
+        are excluded."""
+        return [a for a in self.layers
+                if len(a.shape) >= 2
+                and a.path.rsplit("/", 1)[-1] not in self._ELEMENTWISE]
+
+    def sharding_axes(self) -> set[str]:
+        """Every mesh axis name the manifest's sharding columns (and the
+        ensemble ``replica_axis``) reference."""
+        axes: set[str] = set()
+        for a in self.layers:
+            for entry in a.sharding or ():
+                if entry is None:
+                    continue
+                names = (entry if isinstance(entry, (list, tuple))
+                         else [entry])
+                axes.update(n for n in names if n is not None)
+        if self.replica_axis is not None:
+            axes.add(self.replica_axis)
+        return axes
+
+    def lint(self, *, mesh_axes=None, axis_sizes=None):
+        """Static verification of this manifest —
+        :func:`repro.analysis.lint_plan` (see docs/ANALYSIS.md for the
+        rule catalogue). Returns a list of Findings; empty = clean."""
+        from repro.analysis import lint_plan
+
+        return lint_plan(self, mesh_axes=mesh_axes, axis_sizes=axis_sizes)
 
     # -- packing ----------------------------------------------------------
     def pack(self, params, key: Optional[jax.Array] = None):
@@ -295,12 +331,14 @@ def compile_plan(params, policy, mode: str | BinarizeMode = "det", *,
             mode=mode_str, xnor_boundary=is_xnor_boundary(s))
         kind = "conv" if lc.is_conv else "linear"
         elig: dict[str, str] = {}
-        chosen = None
+        chosen: str | None = None
         for spec in registry.backends(kind):
             ok, why = spec.eligible(lc)
             elig[spec.name] = "ok" if ok else why
             if ok and chosen is None:
                 chosen = spec.name
+        if chosen is None:       # unreachable: dense is always eligible
+            chosen = "dense"
         reason = _reason(lc, chosen, elig)
         if reason == "policy-excluded":
             pat = getattr(policy, "excluded_by", lambda _: None)(s)

@@ -17,7 +17,6 @@ fit the same tokens (``adjust_microbatching``).
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

@@ -60,7 +60,7 @@ from repro.serve.engine import ServeEngine, packed_param_bytes, stream_serve
 
 def wants_plan(args) -> bool:
     return bool(args.packed or args.plan or args.plan_from
-                or args.plan_report or args.override)
+                or args.plan_report or args.override or args.analyze)
 
 
 def make_serve_mesh(args):
@@ -174,8 +174,13 @@ def serve_classifier(arch: str, args) -> None:
                                   or args.plan_from):
         raise SystemExit("--ensemble K samples K stochastic replicas: add "
                          "--packed --binarize stoch")
+    analysis_findings = None
     if wants_plan(args):
         plan = make_plan(params, make_paper_policy(n_fc), args)
+        if args.analyze:
+            # classifier serving is fixed-batch single-device: the HLO /
+            # retrace layers don't apply, so --analyze is plan lints only
+            analysis_findings = plan.lint()
     if args.packed:
         if args.ensemble > 1:
             from repro.stoch import sample_replicas
@@ -275,6 +280,14 @@ def serve_classifier(arch: str, args) -> None:
             print(f"metrics (prometheus) -> {args.metrics_out}")
         else:
             print(f"metrics -> {metrics.save(args.metrics_out)}")
+    if analysis_findings is not None:
+        from repro.analysis import format_findings, gate
+
+        print(format_findings(analysis_findings,
+                              title="static verifier (plan lints; "
+                                    "docs/ANALYSIS.md):"))
+        if gate(analysis_findings):
+            raise SystemExit(1)
 
 
 def main() -> None:
@@ -346,6 +359,13 @@ def main() -> None:
                          "the jitted decode_step/prefill_into (exact "
                          "count + operand bytes per collective kind, "
                          "from the compiled HLO; token archs only)")
+    ap.add_argument("--analyze", action="store_true",
+                    help="run the static verifier (repro.analysis): plan "
+                         "lints over the compiled plan, compiled-HLO "
+                         "lints (donation/upcasts/host transfers; token "
+                         "archs), and the retrace sentinel over the "
+                         "serving loop — exits nonzero on error findings "
+                         "(docs/ANALYSIS.md)")
     args = ap.parse_args()
 
     arch = cb.canonical_arch(args.arch)
@@ -423,6 +443,17 @@ def main() -> None:
         print(format_audit(audit_engine(
             engine, n_slots=args.slots, prompt_len=args.prompt_len,
             max_new_cap=args.max_new)))
+    findings, sentinel = [], None
+    if args.analyze:
+        from repro.analysis import RetraceSentinel, lint_engine
+
+        findings += plan.lint(
+            mesh_axes=mesh.axis_names if mesh is not None else None,
+            axis_sizes=mesh_axis_sizes(mesh))
+        findings += lint_engine(engine, n_slots=args.slots,
+                                prompt_len=args.prompt_len,
+                                max_new_cap=args.max_new)
+        sentinel = RetraceSentinel(engine)
     batcher = SlotBatcher(args.slots, args.prompt_len, tracer=tracer)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
@@ -433,7 +464,7 @@ def main() -> None:
 
     t0 = time.perf_counter()
     steps = stream_serve(engine, batcher, max_new_cap=args.max_new,
-                         metrics=metrics)
+                         metrics=metrics, sentinel=sentinel)
     dt = time.perf_counter() - t0
     done = batcher.completed
     # throughput from tokens actually recorded — never steps * batch, which
@@ -474,6 +505,15 @@ def main() -> None:
                else f"{info['coverage'] * 100:.1f}%")
         print(f"trace -> {path} ({info['spans']} spans, step coverage "
               f"{cov}; open in https://ui.perfetto.dev)")
+    if args.analyze:
+        from repro.analysis import format_findings, gate
+
+        findings += sentinel.findings()
+        print(sentinel.summary())
+        print(format_findings(findings, title="static verifier "
+                                              "(docs/ANALYSIS.md):"))
+        if gate(findings):
+            raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -19,7 +19,6 @@ import argparse
 import json
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import base as cb
 from repro.core.policy import DEFAULT_POLICY, NONE_POLICY, BinarizePolicy

@@ -3,7 +3,6 @@ musicgen)."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.models.layers import apply_linear
 

@@ -16,7 +16,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import PackedLinear, apply_linear
+from repro.models.layers import PackedLinear
 
 
 def _expert_matmul(w, xe, dtype):

@@ -168,7 +168,6 @@ def ssm_decode_step(cfg, params: dict, x: jax.Array, ssm_state: jax.Array,
     bsz = x.shape[0]
     di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
     p = cfg.ssm_head_dim
-    w = cfg.ssm_conv_width
 
     zxbcdt = apply_linear(params["in_proj"], x)[:, 0]      # (B, ...)
     z, xi, b_mat, c_mat, dt = _split_proj(cfg, zxbcdt)

@@ -15,8 +15,7 @@ Forward passes are binarization-agnostic (see models/layers.py).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -449,7 +448,6 @@ def prefill(cfg, params, tokens_or_embeds, sh=None, max_len: int | None = None):
     bsz, s = x.shape[0], x.shape[1]
     positions = jnp.arange(s, dtype=jnp.int32)
     s_kv = A.cache_length(cfg, max_len if max_len is not None else s + 1)
-    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
 
     if cfg.family == "ssm":
         def body(x, lp):

@@ -27,7 +27,7 @@ golden plans on the forced 4-device CPU mesh).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 from repro.core import hlo_analysis as H
 
@@ -100,18 +100,14 @@ def audit_hlo(text: str, entry: str = "program",
 # (placed) arguments and read the per-step collectives off the compiled HLO
 # ---------------------------------------------------------------------------
 
-def audit_engine(engine, *, n_slots: int, prompt_len: int,
-                 max_new_cap: int) -> Dict[str, CollectiveAudit]:
-    """Audits the serving engine's two jitted programs for the given decode
-    geometry: ``decode_step`` (one full step over all slots — the per-step
-    collective count) and ``prefill_into`` (one request splice).
-
-    The programs are lowered with the engine's *placed* parameter tree and
-    a freshly placed :class:`DecodeState` under the engine's ambient mesh,
-    so the compiled HLO is exactly what serving executes — collectives,
-    reshard copies, scan trip weighting and all. Works for both the plain
-    and the K-replica ensemble path (whichever the engine serves).
-    """
+def lower_serving_hlo(engine, *, n_slots: int, prompt_len: int,
+                      max_new_cap: int) -> Dict[str, str]:
+    """Compiled (optimized, SPMD-partitioned) HLO text of the engine's
+    two jitted serving programs — ``decode_step`` and ``prefill_into`` —
+    lowered with the engine's *placed* parameter tree and a freshly placed
+    :class:`DecodeState` under the engine's ambient mesh, so the HLO is
+    exactly what serving executes. Works for both the plain and the
+    K-replica ensemble path (whichever the engine serves)."""
     import jax.numpy as jnp
 
     state = engine.init_decode(n_slots, prompt_len, max_new_cap)
@@ -119,7 +115,6 @@ def audit_engine(engine, *, n_slots: int, prompt_len: int,
     tok = tok.astype(jnp.int32)
     prompt = jnp.zeros((1, prompt_len), jnp.int32)
     slot = jnp.int32(0)
-    out: Dict[str, CollectiveAudit] = {}
     with engine._mesh_ctx():
         if engine._replicas is not None:
             rs = engine._replicas
@@ -135,9 +130,50 @@ def audit_engine(engine, *, n_slots: int, prompt_len: int,
             pre = engine._prefill_into.lower(
                 engine.params, state.cache, state.logits, prompt, slot,
                 state.context_len).compile()
-    out["decode_step"] = audit_hlo(dec.as_text(), entry="decode_step")
-    out["prefill_into"] = audit_hlo(pre.as_text(), entry="prefill_into")
-    return out
+    return {"decode_step": dec.as_text(), "prefill_into": pre.as_text()}
+
+
+def audit_engine(engine, *, n_slots: int, prompt_len: int,
+                 max_new_cap: int) -> Dict[str, CollectiveAudit]:
+    """Audits the serving engine's two jitted programs for the given decode
+    geometry: ``decode_step`` (one full step over all slots — the per-step
+    collective count) and ``prefill_into`` (one request splice). See
+    :func:`lower_serving_hlo` for what is lowered."""
+    texts = lower_serving_hlo(engine, n_slots=n_slots,
+                              prompt_len=prompt_len,
+                              max_new_cap=max_new_cap)
+    return {name: audit_hlo(text, entry=name)
+            for name, text in texts.items()}
+
+
+def attribute_collectives(text: str) -> List[dict]:
+    """Per-collective blame table for one compiled program: every
+    collective op reachable from the entry, trip-count weighted, with the
+    jaxpr source path XLA recorded in its metadata — which plan row /
+    datapath boundary each all-gather or all-reduce belongs to. Each item:
+    ``{kind, op, op_name, computation, trips, bytes_per_step}`` where
+    ``bytes_per_step`` is operand bytes x trips (matching ``audit_hlo``'s
+    accounting) and ``op_name`` is empty when XLA kept no metadata."""
+    comps = H.parse_hlo(text)
+    rows: List[dict] = []
+    for visit in H.iter_ops(text):
+        op = visit.op
+        kind = next((k for k in H._COLLECTIVES
+                     if op.opcode == k or op.opcode.startswith(k + "-")),
+                    None)
+        if kind is None:
+            continue
+        comp = comps[visit.computation]
+        b = sum(H.shape_bytes(comp.ops[n].shape) for n in op.operands
+                if n in comp.ops)
+        if b == 0:
+            b = H.shape_bytes(op.shape)
+        rows.append({"kind": kind, "op": op.name,
+                     "op_name": H.op_metadata_name(op),
+                     "computation": visit.computation,
+                     "trips": visit.mult,
+                     "bytes_per_step": visit.mult * b})
+    return rows
 
 
 def format_audit(audits: Dict[str, CollectiveAudit]) -> str:

@@ -7,7 +7,6 @@ optimizers generic.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple
 
 import jax

@@ -382,6 +382,21 @@ class ServeEngine:
 
         self._ens_prefill_into = jax.jit(_ens_prefill_into, static_argnums=8)
 
+    def jit_entries(self) -> dict:
+        """Name -> jitted entry point, for observability wrappers (the
+        retrace sentinel watches these caches during ``stream_serve``).
+        Ensemble entries appear only when the engine serves replicas;
+        ``decode_chunk`` legitimately compiles one program per distinct
+        chunk length (allowlisted by the sentinel's default)."""
+        entries = {"prefill": self._prefill, "decode": self._decode,
+                   "decode_chunk": self._decode_chunk,
+                   "prefill_into": self._prefill_into}
+        for name in ("_prefill_ens", "_decode_ens", "_ens_prefill_into"):
+            fn = getattr(self, name, None)
+            if fn is not None:
+                entries[name.strip("_")] = fn
+        return entries
+
     def _mesh_ctx(self):
         """Ambient-mesh context for every jitted call (no-op off-mesh)."""
         if self.mesh is None:
@@ -606,7 +621,8 @@ def stream_serve(engine: ServeEngine, batcher, *,
                  temperature: float = 0.0,
                  key: Optional[jax.Array] = None,
                  metrics=None,
-                 decode_chunk: int = 1) -> int:
+                 decode_chunk: int = 1,
+                 sentinel=None) -> int:
     """Step-level continuous-batching serving loop.
 
     Each iteration: retire finished requests and re-prefill their slots
@@ -643,6 +659,12 @@ def stream_serve(engine: ServeEngine, batcher, *,
     counters, the request-ledger TTFT/latency histograms, and a
     ``serve_tok_per_s`` gauge — the numbers ``serve_bench`` and
     ``launch.serve --metrics-out`` report.
+
+    ``sentinel`` (a ``repro.analysis.RetraceSentinel``) is stepped once
+    per loop iteration after its decode, recording any post-warmup jit
+    recompile of the engine's entry points — the silent
+    retrace-every-step failure mode (``launch.serve --analyze`` wires
+    this up; strict sentinels raise at the offending step).
     """
     if temperature > 0.0 and key is None:
         raise ValueError("temperature-sampled serving requires a PRNG key")
@@ -706,6 +728,8 @@ def stream_serve(engine: ServeEngine, batcher, *,
                             for i in range(d):
                                 batcher.record(tok_chunk[:, i])
                         steps += d
+                        if sentinel is not None:
+                            sentinel.step()
                         if metrics is not None:
                             metrics.counter("serve_steps_total",
                                             "token-emission steps").inc(d)
@@ -749,6 +773,8 @@ def stream_serve(engine: ServeEngine, batcher, *,
                             step_h.observe(time.perf_counter() - t_step)
                         return steps
                     state = engine.decode_step(state, tok)
+                    if sentinel is not None:
+                        sentinel.step()
                 if step_h is not None:
                     step_h.observe(time.perf_counter() - t_step)
         finally:

@@ -14,7 +14,6 @@ feedback hook in between (2) and (3).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Optional
 
 import jax

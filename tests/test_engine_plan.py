@@ -168,17 +168,32 @@ class TestShardingColumn:
         return compile_plan(lm, DEFAULT_POLICY, mode, warn=False)
 
     def test_binary_backends_tp_shard_out_channel(self):
-        """Every bitpacked row puts "model" on the last (N / out-channel)
-        dim and nowhere else — the int32 word dim must never split a
-        32-bit lane group across devices."""
+        """Every bitpacked row puts "model" on exactly one dim: the last
+        (N / out-channel) dim by default, or — for backends declaring a
+        ``tp_contract_dim`` (xnor's exact-popcount row-parallel path,
+        PR 8) — the contraction dim of the Megatron row-parallel
+        projections (w_o / w_down), where the word dim splits as whole
+        int32 words. A 32-bit lane group never crosses a device either
+        way."""
         plan = self._lm_plan("xnor")
         binary = [a for a in plan.layers
                   if a.backend in ("packed", "xnor", "xnor_conv",
                                    "binarized_dense")]
         assert binary, "expected bitpacked rows in the xnor plan"
+        row_parallel = []
         for a in binary:
-            assert a.sharding[-1] == "model", a.path
-            assert all(e is None for e in a.sharding[:-1]), a.path
+            spec = registry.get_backend(a.backend)
+            if (spec.tp_contract_dim is not None
+                    and a.sharding[-2] == "model"):
+                row_parallel.append(a.path)
+                others = a.sharding[:-2] + a.sharding[-1:]
+            else:
+                assert a.sharding[-1] == "model", a.path
+                others = a.sharding[:-1]
+            assert all(e is None for e in others), a.path
+        # the xnor plan actually exercises the row-parallel branch
+        assert any(p.endswith(("w_o", "w_down")) for p in row_parallel), \
+            row_parallel
 
     def test_dense_rows_follow_megatron_rules(self):
         """w_o is row-parallel ("model" on the input dim) only when it

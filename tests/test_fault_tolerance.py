@@ -11,7 +11,7 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.core.policy import BinarizePolicy
 from repro.data import pipeline, synthetic as syn
 from repro.ft.elastic import adjust_microbatching, best_mesh_shape
-from repro.ft.failures import FailureInjector, InjectedFailure
+from repro.ft.failures import FailureInjector
 from repro.ft.straggler import StragglerMonitor
 from repro.models import mnist_fc
 from repro.optim import schedules

@@ -1,8 +1,9 @@
 """HLO analyzer correctness: FLOPs vs analytic, trip-count attribution,
 collective accounting, shape parsing."""
+import textwrap
+
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core import hlo_analysis as H
@@ -72,7 +73,9 @@ class TestFlops:
 
 class TestCollectives:
     def test_collective_bytes_counted(self):
-        import subprocess, sys, textwrap, json, os
+        import json
+        import subprocess
+        import sys
         # needs >1 device: run in a subprocess with forced host devices
         code = textwrap.dedent("""
             import os
@@ -125,3 +128,88 @@ class TestRoofline:
     def test_model_flops(self):
         assert R.model_flops_train(1e9, 1e6) == 6e15
         assert R.model_flops_infer(1e9, 1) == 2e9
+
+
+class TestIterOpsAndAliases:
+    """Trip-weighted op iteration + module-header donation facts (the
+    surfaces repro.analysis.hlo_lints builds on)."""
+
+    _WHILE_COPY_HLO = textwrap.dedent("""\
+        HloModule m
+
+        %body (p.1: (s32[], f32[64])) -> (s32[], f32[64]) {
+          %p.1 = (s32[], f32[64]) parameter(0)
+          %i = s32[] get-tuple-element(%p.1), index=0
+          %one = s32[] constant(1)
+          %next = s32[] add(%i, %one)
+          %x = f32[64]{0} get-tuple-element(%p.1), index=1
+          %cp = f32[64]{0} copy(%x), metadata={op_name="jit(f)/while/reshard"}
+          ROOT %t = (s32[], f32[64]) tuple(%next, %cp)
+        }
+
+        %cond (p.2: (s32[], f32[64])) -> pred[] {
+          %p.2 = (s32[], f32[64]) parameter(0)
+          %iv = s32[] get-tuple-element(%p.2), index=0
+          %n = s32[] constant(5)
+          ROOT %lt = pred[] compare(%iv, %n), direction=LT
+        }
+
+        ENTRY %main (a: f32[64]) -> f32[64] {
+          %a = f32[64]{0} parameter(0)
+          %z = s32[] constant(0)
+          %init = (s32[], f32[64]) tuple(%z, %a)
+          %w = (s32[], f32[64]) while(%init), condition=%cond, body=%body
+          ROOT %out = f32[64]{0} get-tuple-element(%w), index=1
+        }
+        """)
+
+    def test_copy_bytes_are_trip_weighted(self):
+        """A resharding copy inside a 5-trip while counts 5x — the same
+        attribution the collectives get."""
+        cost = H.analyze(self._WHILE_COPY_HLO)
+        assert cost.copy_count == 5
+        assert cost.copy_bytes == 5 * 64 * 4
+        assert cost.unparsed_while == 0
+
+    def test_iter_ops_reaches_while_body_with_mult(self):
+        visits = [v for v in H.iter_ops(self._WHILE_COPY_HLO)
+                  if v.op.opcode == "copy"]
+        assert len(visits) == 1
+        v = visits[0]
+        assert v.mult == 5.0
+        assert v.computation == "body"
+        assert not v.in_fusion
+        assert H.op_metadata_name(v.op) == "jit(f)/while/reshard"
+
+    def test_iter_ops_entry_selection(self):
+        names = {v.op.name for v in H.iter_ops(self._WHILE_COPY_HLO,
+                                               entry="cond")}
+        assert names == {"p.2", "iv", "n", "lt"}
+
+    def test_zero_collective_graph(self):
+        c = jax.jit(lambda a: a @ a).lower(
+            jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+        cost = H.analyze(c.as_text())
+        assert dict(cost.collective_count) == {}
+        assert cost.collective_bytes == 0.0
+        assert cost.flops > 0
+
+    def test_donated_program_declares_alias(self):
+        donated = jax.jit(lambda x: x * 2.0, donate_argnums=0).lower(
+            jnp.ones((32, 32))).compile().as_text()
+        aliases = H.input_output_aliases(donated)
+        assert aliases, "donate_argnums=0 must surface in the module header"
+        idx, param, kind = aliases[0]
+        assert param == 0 and kind in ("may-alias", "must-alias")
+
+    def test_undonated_program_has_no_alias(self):
+        text = jax.jit(lambda x: x * 2.0).lower(
+            jnp.ones((32, 32))).compile().as_text()
+        assert H.input_output_aliases(text) == []
+
+    def test_alias_header_multi_entry_parse(self):
+        text = ("HloModule m, input_output_alias={ {1}: (13, {}, "
+                "may-alias), {0, 2}: (2, {}, must-alias) }, "
+                "entry_computation_layout={()->f32[1]}")
+        assert H.input_output_aliases(text) == [
+            ((1,), 13, "may-alias"), ((0, 2), 2, "must-alias")]

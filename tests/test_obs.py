@@ -8,7 +8,7 @@ import time
 import numpy as np
 import pytest
 
-from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+from repro.obs.metrics import (Counter, Histogram, MetricsRegistry,
                                record_request_metrics)
 from repro.obs.trace import _NULL_SPAN, NULL_TRACER, Tracer, validate_trace
 

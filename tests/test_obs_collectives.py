@@ -147,8 +147,8 @@ class TestAuditVsHloAnalysis:
                 "hlo_bytes": dict(cost.collective_bytes_by_kind),
             }))
         """)
-        res = json.loads([l for l in out.splitlines()
-                          if l.startswith("RESULT ")][-1][len("RESULT "):])
+        res = json.loads([ln for ln in out.splitlines()
+                          if ln.startswith("RESULT ")][-1][len("RESULT "):])
         audit = CollectiveAudit.from_json(res["audit"])
         # agreement with the hlo_analysis walk, kind for kind
         assert audit.counts == res["hlo_counts"]
@@ -174,8 +174,8 @@ class TestGoldenShardedAudit:
             from benchmarks.check_collectives import _child
             print("RESULT " + json.dumps(_child()))
         """)
-        return json.loads([l for l in out.splitlines()
-                           if l.startswith("RESULT ")][-1][len("RESULT "):])
+        return json.loads([ln for ln in out.splitlines()
+                           if ln.startswith("RESULT ")][-1][len("RESULT "):])
 
     def test_matches_committed_golden(self, measured):
         with open(GOLDEN) as f:

@@ -18,7 +18,7 @@ from repro.stoch import (EnsembleStats, ensemble_forward, ensemble_stats,
 
 
 def _tree_arrays(tree):
-    return [np.asarray(l) for l in jax.tree_util.tree_leaves(tree)]
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(tree)]
 
 
 def assert_trees_identical(a, b):

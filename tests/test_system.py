@@ -8,7 +8,6 @@ packed server reproduces the dense-binarized model's outputs.
 import tempfile
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import base as cb

@@ -4,8 +4,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import binarize as B
-from repro.core.policy import NONE_POLICY
 from repro.data import synthetic as syn
 from repro.launch.train import make_paper_policy
 from repro.models import vgg
