@@ -14,6 +14,10 @@ measures:
 * tokens/s across slot counts (the compiled batch dimension);
 * burst vs staggered arrival (requests joining mid-stream through
   ``prefill_into`` — no round barrier to wait for);
+* chunked prefill + prefix KV reuse under staggered arrival: whole-prompt
+  vs fused ``decode_prefill`` admission (burst-gap ratio + TTFT medians),
+  and a shared-prefix workload served cold vs from prefix-cache hits
+  (hit TTFT must undercut the cold median);
 * dense vs packed vs xnor execution plans under the step-level loop;
 * mesh-sharded vs single-device serving (tensor-parallel execution plans
   on a forced 2x2 ("data", "model") CPU mesh, run in a subprocess so this
@@ -91,10 +95,10 @@ def _run_round_loop(engine, batcher, cap: int) -> tuple[float, int, int]:
     return time.perf_counter() - t0, rounds, batcher.tokens_generated
 
 
-def _fresh_batcher(cfg, slots: int):
+def _fresh_batcher(cfg, slots: int, prompt_len: int = PROMPT_LEN):
     from repro.serve.batcher import SlotBatcher
 
-    return SlotBatcher(slots, PROMPT_LEN)
+    return SlotBatcher(slots, prompt_len)
 
 
 def _staggered_loop(engine, cfg, slots: int, n: int, cap: int,
@@ -127,6 +131,39 @@ def _staggered_loop(engine, cfg, slots: int, n: int, cap: int,
         state = engine.decode_step(state, tok)
     batcher.refill()
     return time.perf_counter() - t0, steps, batcher.tokens_generated
+
+
+def _staggered_stream(engine, cfg, slots: int, n: int, cap: int, every: int,
+                      *, prefill_chunk: int = 0, prefix_cache=None,
+                      shared_prefix: int = 0, prompt_len: int = PROMPT_LEN):
+    """Open-loop staggered arrival through ``stream_serve``'s ``arrivals``
+    hook (one request every ``every`` iterations; ``every=0`` submits the
+    whole batch up front — the burst baseline through the *same* loop
+    driver), optionally with chunked prefill, a prefix cache, and a shared
+    prompt prefix (the multi-tenant system-prompt workload). Returns the
+    batcher for TTFT accounting."""
+    from repro.serve.engine import stream_serve
+
+    batcher = _fresh_batcher(cfg, slots, prompt_len)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, prompt_len) for _ in range(n)]
+    if shared_prefix:
+        for p in prompts[1:]:
+            p[:shared_prefix] = prompts[0][:shared_prefix]
+    sub = {"n": 0}
+
+    def arrivals(iteration: int) -> bool:
+        while sub["n"] < n and iteration >= sub["n"] * every:
+            batcher.submit(prompts[sub["n"]], cap)
+            sub["n"] += 1
+        return sub["n"] < n
+
+    t0 = time.perf_counter()
+    steps = stream_serve(engine, batcher, max_new_cap=cap,
+                         prefill_chunk=prefill_chunk,
+                         prefix_cache=prefix_cache, arrivals=arrivals)
+    return (time.perf_counter() - t0, steps, batcher.tokens_generated,
+            batcher)
 
 
 def _sharded_child(modes: list[str], n: int, cap: int, slots: int,
@@ -289,6 +326,100 @@ def main(fast: bool = False):
                         f"tok/s={toks / dt:.1f}"))
     record["arrival_staggered"] = {"s": dt, "tokens": toks, "tok_s": toks / dt}
 
+    # -- chunked prefill + prefix KV reuse (staggered arrival) ------------
+    # Staggered arrival is where whole-prompt admission hurts: every
+    # arriving prompt is a separate prefill dispatch while the live slots
+    # wait. Chunked prefill folds admission INTO the decode step (the
+    # fused decode_prefill program — one dispatch advances all live slots
+    # and one prompt chunk), closing the burst-vs-staggered gap; a prefix
+    # cache on a shared-prefix workload then removes the prefill work
+    # itself, pulling hit TTFT below the cold median.
+    from repro.serve import PrefixCache
+
+    def _ttft_ms(b):
+        return float(np.median([r.ttft for r in b.completed]) * 1e3)
+
+    # This section runs on its own geometry: a 16x-longer prompt (the
+    # regime the ROADMAP item is about — prefill work comparable to many
+    # decode steps; at PROMPT_LEN=8 a whole-prompt prefill costs barely
+    # more than one decode step and there is nothing for chunking to
+    # hide) and a 32-token cap so admission cost is amortized over a real
+    # decode stream. Gap methodology: shared-core CPU drift between runs
+    # is +/-15%, larger than the effects measured here, so each row's
+    # burst_gap is the MEDIAN over paired samples — every staggered run
+    # is immediately preceded by a burst run through the SAME
+    # stream_serve driver (``every=0`` = submit everything up front) at
+    # the SAME geometry, and the ratio is taken within the pair, where
+    # drift cancels. Two chunk sizes: chunk == prompt admits each prompt
+    # in ONE fused decode+prefill dispatch; chunk == prompt/4 exercises
+    # true multi-chunk admission (and partial prefix snapshots). On this
+    # serial-CPU smoke host the fused program's chunk compute cannot
+    # overlap decode compute (the compiled fused HLO is op-for-op the sum
+    # of decode_step + prefill_chunk), so plain chunked rows carry the
+    # admitted slot's masked iterations as visible overhead — the row
+    # that closes the burst gap outright is prefix_warm below, where the
+    # chunked machinery plus prefix reuse removes the prefill work
+    # instead of hiding it. On parallel accelerators, where decode is
+    # memory-bound and chunk FLOPs ride along free, the plain chunked
+    # rows are the ones expected to close the gap.
+    ch_prompt, ch_chunk, ch_cap = 16 * PROMPT_LEN, 4 * PROMPT_LEN, 32
+    ch_n, ch_every, ch_pairs = 12, 2, 5
+
+    def _chunk_stream(every: int, **kw):
+        return _staggered_stream(engine, cfg, arr_slots, ch_n, ch_cap,
+                                 every, prompt_len=ch_prompt, **kw)
+
+    def _paired(pairs: int, **kw):
+        """Median-gap estimate: (burst, staggered) sample pairs, ratio
+        taken within each pair. Returns the median pair (by gap)."""
+        samples = []
+        for _ in range(pairs):
+            bdt, _bs, btoks, _bb = _chunk_stream(0)
+            dt, steps, toks, b = _chunk_stream(ch_every, **kw)
+            samples.append(((btoks / bdt) / (toks / dt), dt, steps, toks, b))
+        samples.sort(key=lambda s: s[0])
+        return samples[len(samples) // 2]
+
+    _chunk_stream(0)                                     # warmup/compile
+    chunked = {"prompt_len": ch_prompt, "chunk": ch_chunk, "cap": ch_cap,
+               "n": ch_n, "every": ch_every, "pairs": ch_pairs}
+    for tag, kw in (("staggered_whole", {}),
+                    ("staggered_chunked", {"prefill_chunk": ch_prompt}),
+                    ("staggered_chunked_multi",
+                     {"prefill_chunk": ch_chunk})):
+        _chunk_stream(ch_every, **kw)                    # warmup/compile
+        gap, dt, steps, toks, b = _paired(ch_pairs, **kw)
+        chunked[tag] = {"s": dt, "tokens": toks, "tok_s": toks / dt,
+                        "ttft_ms": _ttft_ms(b), "burst_gap": gap}
+        rows.append(csv_row(
+            f"serve/{tag}", dt / max(steps, 1) * 1e6,
+            f"tok/s={toks / dt:.1f} burst_gap={gap:.2f}x "
+            f"ttft_ms={_ttft_ms(b):.1f}"))
+
+    # shared-prefix workload: pass 1 populates the cache (cold, a single
+    # unpaired stream), later passes admit every prompt from a
+    # full-prompt prefix hit (warm, paired like the rows above — the
+    # cache stays warm so the pair loop re-serves it)
+    pc = PrefixCache()
+    dt, steps, toks, b = _chunk_stream(ch_every, prefill_chunk=ch_chunk,
+                                       prefix_cache=pc,
+                                       shared_prefix=ch_prompt)
+    chunked["prefix_cold"] = {"s": dt, "tok_s": toks / dt,
+                              "ttft_ms": _ttft_ms(b)}
+    gap, dt, steps, toks, b = _paired(3, prefill_chunk=ch_chunk,
+                                      prefix_cache=pc,
+                                      shared_prefix=ch_prompt)
+    chunked["prefix_warm"] = {"s": dt, "tok_s": toks / dt, "burst_gap": gap,
+                              "ttft_ms": _ttft_ms(b), **pc.stats()}
+    warm_ttft = chunked["prefix_warm"]["ttft_ms"]
+    cold_ttft = chunked["prefix_cold"]["ttft_ms"]
+    rows.append(csv_row(
+        "serve/staggered_prefix_warm", dt / max(steps, 1) * 1e6,
+        f"tok/s={toks / dt:.1f} burst_gap={gap:.2f}x "
+        f"ttft_ms={warm_ttft:.1f} (cold {cold_ttft:.1f}) hits={pc.hits} "
+        f"skipped={pc.tokens_skipped}tok"))
+    record["chunked_prefill"] = chunked
+
     # -- execution plans under the step loop ------------------------------
     plan_n, plan_cap = (8, 8) if fast else (16, 16)
     for plan in ("dense", "det", "xnor"):
@@ -364,6 +495,11 @@ def main(fast: bool = False):
     # flaking on shared-core CI parity physics.
     best = {m: max(v.values()) for m, v in ratios.items() if v}
     record["sharded_ratio"] = ratios
+    # promoted from the run_manifest into the results proper: the best
+    # sharded/single ratio per mode is the envelope number the README's
+    # soft floor (det >= ~0.7, xnor >= ~0.35 on shared-core CPU; hard
+    # gate 0.25) tracks across PRs
+    record["sharded_ratio_best"] = best
     for mode, r in sorted(best.items()):
         rows.append(csv_row(f"serve/sharded_best_ratio_{mode}", 0.0,
                             f"best_ratio={r:.2f}x (gate: >= 0.25)"))

@@ -184,9 +184,10 @@ def lint_engine(engine: Any, *, n_slots: int, prompt_len: int,
                 max_new_cap: int,
                 budgets: Optional[Mapping[str, Mapping[str, int]]] = None
                 ) -> List[Finding]:
-    """Lower the engine's serving programs and lint both: donation is
-    required of ``decode_step`` (the engine donates its cache there);
-    ``budgets`` maps entry name -> per-kind collective budget."""
+    """Lower the engine's serving programs and lint them all: donation is
+    required of ``decode_step`` and the fused ``decode_prefill`` (the
+    engine donates its cache + logits to both); ``budgets`` maps entry
+    name -> per-kind collective budget."""
     from repro.obs.collectives import lower_serving_hlo
 
     texts = lower_serving_hlo(engine, n_slots=n_slots,
@@ -197,5 +198,5 @@ def lint_engine(engine: Any, *, n_slots: int, prompt_len: int,
         findings += lint_hlo(
             text, entry=name,
             budget=(budgets or {}).get(name),
-            require_donation=(name == "decode_step"))
+            require_donation=(name in ("decode_step", "decode_prefill")))
     return findings

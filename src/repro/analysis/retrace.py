@@ -24,8 +24,13 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence
 from repro.analysis.findings import ERROR, Finding
 
 #: Entries allowed to compile after warmup: ``decode_chunk`` jits one
-#: program per distinct static chunk length ``d`` by design.
-DEFAULT_ALLOW = ("decode_chunk",)
+#: program per distinct static chunk length ``d`` by design; the chunked-
+#: prefill entries (``prefill_chunk`` / the fused ``decode_prefill``) jit
+#: one program per distinct prefill-chunk length (a short final chunk),
+#: and the prefix-cache ``splice`` / ``extract`` entries first compile at
+#: the first hit / capture, which can land after warmup by design.
+DEFAULT_ALLOW = ("decode_chunk", "prefill_chunk", "decode_prefill",
+                 "splice", "extract")
 
 
 class RetraceError(RuntimeError):

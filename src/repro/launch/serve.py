@@ -30,9 +30,19 @@ vote agreement / logit variance per request; ``--abstain-threshold`` flags
 low-agreement requests. Works for both the token archs (resident replica
 cache in the streaming loop) and the classifiers (vmapped batch forward).
 
+Chunked prefill + prefix reuse (single-sample serving): ``--prefill-chunk
+C`` admits prompts C tokens at a time through the fused decode+prefill
+step — arriving prompts no longer stall live decode slots — and
+``--prefix-cache N`` adds an N-entry LRU prompt-prefix KV cache so
+requests sharing a prefix (``--shared-prefix P`` on synthetic workloads)
+splice cached rows and skip prefill chunks. Streams stay bit-identical to
+whole-prompt admission (tests/test_serve_conformance.py).
+
 Examples:
   PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b --smoke \
       --packed --requests 16 --prompt-len 32 --max-new 16
+  PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b --smoke \
+      --packed --prefill-chunk 8 --prefix-cache 32 --shared-prefix 16
   PYTHONPATH=src python -m repro.launch.serve --arch mnist-fc --smoke \
       --packed --binarize stoch --ensemble 8 --abstain-threshold 0.6
   PYTHONPATH=src python -m repro.launch.serve --arch vgg16-cifar10 --smoke \
@@ -331,6 +341,21 @@ def main() -> None:
     ap.add_argument("--max-new-skew", type=int, default=0,
                     help="randomize each request's max_new down by up to "
                          "this many tokens (exercises per-step slot refill)")
+    ap.add_argument("--prefill-chunk", type=int, default=0, metavar="C",
+                    help="admit prompts C tokens at a time through the "
+                         "fused decode+prefill step instead of stalling "
+                         "every live slot on a whole-prompt prefill "
+                         "(0 = whole-prompt; token archs, single-sample "
+                         "serving only)")
+    ap.add_argument("--prefix-cache", type=int, default=0, metavar="N",
+                    help="enable the prompt-prefix KV cache with an N-entry "
+                         "LRU budget (0 = off): requests sharing a prompt "
+                         "prefix splice the cached rows and skip those "
+                         "prefill chunks; implies chunked admission")
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="P",
+                    help="give every generated request the same first P "
+                         "prompt tokens (demonstrates --prefix-cache hits "
+                         "on synthetic workloads)")
     ap.add_argument("--mesh", default="",
                     help="serve tensor-parallel on a device mesh: comma-"
                          "separated axis names, e.g. 'data,model' (token "
@@ -369,10 +394,18 @@ def main() -> None:
     args = ap.parse_args()
 
     arch = cb.canonical_arch(args.arch)
+    if (args.prefill_chunk or args.prefix_cache) and args.ensemble > 1:
+        raise SystemExit("--prefill-chunk/--prefix-cache are single-sample "
+                         "serving features; K-replica ensemble serving "
+                         "prefills whole prompts")
     if arch in ("mnist_fc", "vgg16_cifar10"):
         if args.mesh:
             raise SystemExit("--mesh serving covers the token archs; the "
                              "classifier path is fixed-batch single-device")
+        if args.prefill_chunk or args.prefix_cache:
+            raise SystemExit("--prefill-chunk/--prefix-cache chunk the "
+                             "token-arch prompt admission; the classifier "
+                             "path has no prompts")
         if args.trace or args.audit_collectives:
             raise SystemExit("--trace/--audit-collectives instrument the "
                              "step-level token serving loop; the classifier "
@@ -454,17 +487,29 @@ def main() -> None:
                                 prompt_len=args.prompt_len,
                                 max_new_cap=args.max_new)
         sentinel = RetraceSentinel(engine)
+    prefix_cache = None
+    if args.prefix_cache:
+        from repro.serve import PrefixCache
+
+        prefix_cache = PrefixCache(max_entries=args.prefix_cache)
     batcher = SlotBatcher(args.slots, args.prompt_len, tracer=tracer)
     rng = np.random.default_rng(args.seed)
+    shared = (rng.integers(0, cfg.vocab_size,
+                           min(args.shared_prefix, args.prompt_len))
+              if args.shared_prefix else None)
     for i in range(args.requests):
         # per-request max_new: uniform in [max(1, max_new - skew), max_new]
         m = args.max_new - int(rng.integers(0, args.max_new_skew + 1))
-        batcher.submit(rng.integers(0, cfg.vocab_size, args.prompt_len),
-                       max(1, m))
+        prompt = rng.integers(0, cfg.vocab_size, args.prompt_len)
+        if shared is not None:
+            prompt[:shared.shape[0]] = shared
+        batcher.submit(prompt, max(1, m))
 
     t0 = time.perf_counter()
     steps = stream_serve(engine, batcher, max_new_cap=args.max_new,
-                         metrics=metrics, sentinel=sentinel)
+                         metrics=metrics, sentinel=sentinel,
+                         prefill_chunk=args.prefill_chunk,
+                         prefix_cache=prefix_cache)
     dt = time.perf_counter() - t0
     done = batcher.completed
     # throughput from tokens actually recorded — never steps * batch, which
@@ -475,6 +520,12 @@ def main() -> None:
     print(f"served {len(done)} requests in {steps} decode steps, {dt:.2f}s "
           f"({n_tokens} tokens, {n_tokens/dt:.1f} tok/s; median TTFT "
           f"{ttft*1e3:.1f} ms, median latency {lat*1e3:.1f} ms)")
+    if prefix_cache is not None:
+        s = prefix_cache.stats()
+        print(f"prefix cache: {s['hits']} hits / {s['misses']} misses, "
+              f"{s['tokens_skipped']} prompt tokens skipped, "
+              f"{s['entries']} entries ({s['bytes']/1e6:.1f}MB), "
+              f"{s['evictions']} evictions")
     if ensemble_set is not None and done:
         alla = np.array([a for r in done for a in r.agreement])
         n_abst = sum(1 for r in done if r.abstained)

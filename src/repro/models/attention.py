@@ -223,6 +223,84 @@ def decode_attention(cfg, params, x, k_cache, v_cache, pos, sh=None):
     return apply_linear(params["w_o"], out, sh=sh, kind="btd"), k_cache, v_cache
 
 
+def chunk_attention(cfg, params, x, k_cache, v_cache, slot, offset, sh=None):
+    """Chunked-prefill attention: C prompt tokens of ONE slot against the
+    slot-addressed cache. x: (1, C, D); caches: (n_slots, S_cache, KV, hd);
+    slot / offset are traced int32 scalars, ``offset`` = tokens already
+    prefilled into the slot.
+
+    The chunk's queries attend over [pre-write cache rows ++ the chunk's
+    own K/V] with one softmax, so a partially-prefilled slot sees exactly
+    the tokens a whole-prompt prefill would: cache lanes are masked to the
+    real pre-offset tokens (by token age for ring caches), chunk lanes are
+    causal within the chunk (+ window). The chunk's K/V are written to the
+    slot's ring/linear positions only AFTER attention — writing first
+    would evict ring tokens still inside earlier in-chunk queries'
+    windows. Ring caches therefore require C <= S_cache (the engine clamps
+    the chunk size). Returns (out, k_cache, v_cache)."""
+    _, c, _ = x.shape
+    s_cache = k_cache.shape[1]
+    qkv = apply_linear(params["w_qkv"], x, params.get("b_qkv"),
+                       sh=sh, kind="qkv")
+    q, k, v = _split_qkv(cfg, qkv)                       # (1, C, H/KV, hd)
+    positions = offset + jnp.arange(c, dtype=jnp.int32)  # absolute positions
+    q = apply_rope(q, positions[None, :], cfg.rope_theta)
+    k = apply_rope(k, positions[None, :], cfg.rope_theta)
+
+    # the slot's pre-write cache rows (1, S_cache, KV, hd)
+    k_ctx = jax.lax.dynamic_slice_in_dim(k_cache, slot, 1, axis=0)
+    v_ctx = jax.lax.dynamic_slice_in_dim(v_cache, slot, 1, axis=0)
+
+    # Grouped attention without GQA-expanding the cache (same trick as
+    # decode_attention): q -> (1, C, KV, G, hd) against (1, S+C, KV, hd).
+    groups = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(1, c, cfg.n_kv_heads, groups, cfg.head_dim)
+    scale = cfg.head_dim ** -0.5
+    k_all = jnp.concatenate([k_ctx.astype(x.dtype), k.astype(x.dtype)], axis=1)
+    v_all = jnp.concatenate([v_ctx.astype(x.dtype), v.astype(x.dtype)], axis=1)
+    logits = jnp.einsum("bcngd,bsnd->bngcs", qg,
+                        k_all).astype(jnp.float32) * scale
+
+    qi = jnp.arange(c, dtype=jnp.int32)
+    si = jnp.arange(s_cache, dtype=jnp.int32)
+    p_q = offset + qi                                    # (C,)
+    if cfg.sliding_window:
+        # ring slot s holds token t_s = (offset-1) - ((offset-1-s) % S);
+        # negative t_s means the slot was never written for this prefix
+        t_s = (offset - 1) - ((offset - 1 - si) % s_cache)
+        ctx_valid = ((t_s[None, :] >= 0)
+                     & (p_q[:, None] - t_s[None, :] < cfg.sliding_window))
+    else:
+        ctx_valid = jnp.broadcast_to(si[None, :] < offset, (c, s_cache))
+    chunk_valid = qi[None, :] <= qi[:, None]
+    if cfg.sliding_window:
+        chunk_valid &= (qi[:, None] - qi[None, :]) < cfg.sliding_window
+    valid = jnp.concatenate([ctx_valid, chunk_valid], axis=1)  # (C, S+C)
+    logits = jnp.where(valid[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bngcs,bsnd->bcngd", probs, v_all)
+    out = out.reshape(1, c, cfg.q_dim)
+
+    # post-attention write of the chunk's K/V into the slot's rows
+    kc = k.astype(k_cache.dtype)
+    vc = v.astype(v_cache.dtype)
+    if cfg.sliding_window:
+        # ring: chunk token j lands at slot (offset + j) % S_cache; with
+        # C <= S_cache every chunk token gets a distinct slot, and slots
+        # not addressed by the chunk keep their previous occupant
+        i_for_s = (si - offset) % s_cache
+        sel = (i_for_s < c)[None, :, None, None]
+        gather = jnp.minimum(i_for_s, c - 1)
+        k_row = jnp.where(sel, jnp.take(kc, gather, axis=1), k_ctx)
+        v_row = jnp.where(sel, jnp.take(vc, gather, axis=1), v_ctx)
+    else:
+        k_row = jax.lax.dynamic_update_slice(k_ctx, kc, (0, offset, 0, 0))
+        v_row = jax.lax.dynamic_update_slice(v_ctx, vc, (0, offset, 0, 0))
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_row, slot, axis=0)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_row, slot, axis=0)
+    return apply_linear(params["w_o"], out, sh=sh, kind="btd"), k_cache, v_cache
+
+
 def cache_length(cfg, seq_len: int) -> int:
     """Static KV-cache length for an arch at a given context length."""
     if cfg.sliding_window:

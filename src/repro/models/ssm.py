@@ -40,22 +40,33 @@ def _split_proj(cfg, zxbcdt):
     return z, x, b_mat, c_mat, dt
 
 
-def _causal_conv(xbc: jax.Array, w: jax.Array) -> jax.Array:
-    """Depthwise causal conv, xbc: (B, S, C), w: (W, C)."""
+def _causal_conv(xbc: jax.Array, w: jax.Array, history=None) -> jax.Array:
+    """Depthwise causal conv, xbc: (B, S, C), w: (W, C).
+
+    ``history`` is an optional (B, W-1, C) window of the raw pre-conv
+    channels preceding ``xbc`` (a decode ``conv_state``); ``None`` means
+    start-of-sequence, which pads with zeros — bitwise identical to a
+    zero history window."""
     width = w.shape[0]
-    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    if history is None:
+        pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([history.astype(xbc.dtype), xbc], axis=1)
     out = jnp.zeros_like(xbc, dtype=jnp.float32)
     for i in range(width):
         out = out + pad[:, i:i + xbc.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
     return jax.nn.silu(out).astype(xbc.dtype)
 
 
-def ssd_chunked(x, dt, a, b_mat, c_mat, chunk: int, sh=None):
+def ssd_chunked(x, dt, a, b_mat, c_mat, chunk: int, sh=None,
+                init_state=None):
     """Chunked SSD scan.
 
     x: (B, S, H, P); dt: (B, S, H) post-softplus; a: (H,) negative decay;
-    b_mat/c_mat: (B, S, N). Returns y: (B, S, H, P) and final state
-    (B, H, P, N)."""
+    b_mat/c_mat: (B, S, N). ``init_state`` is an optional (B, H, P, N)
+    carry-in state (mid-prefill continuation); ``None`` starts from zeros,
+    which is bitwise identical to passing explicit zeros. Returns
+    y: (B, S, H, P) and final state (B, H, P, N)."""
     bsz, s, h, p = x.shape
     n = b_mat.shape[-1]
     nc = s // chunk
@@ -101,7 +112,10 @@ def ssd_chunked(x, dt, a, b_mat, c_mat, chunk: int, sh=None):
         h_new = h_prev * dec[..., None, None] + st
         return h_new, h_prev
 
-    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    if init_state is None:
+        init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    else:
+        init = init_state.astype(jnp.float32)
     final_state, h_before = jax.lax.scan(
         step,
         init,
@@ -118,8 +132,15 @@ def ssd_chunked(x, dt, a, b_mat, c_mat, chunk: int, sh=None):
 
 
 def ssm_forward(cfg, params: dict, x: jax.Array, sh=None,
-                chunk: int = 128, return_state: bool = False):
-    """Full-sequence Mamba2 mixer. x: (B, S, D) -> (B, S, D)."""
+                chunk: int = 128, return_state: bool = False,
+                initial_state=None, conv_state=None):
+    """Full-sequence Mamba2 mixer. x: (B, S, D) -> (B, S, D).
+
+    ``initial_state`` (B, H, P, N) and ``conv_state`` (B, W-1, conv_dim)
+    continue a partially-consumed sequence (chunked prefill): the SSD scan
+    starts from ``initial_state`` and the causal conv sees ``conv_state``
+    as its left context. Both default to start-of-sequence (zeros), which
+    is bitwise identical to omitting them."""
     bsz, s, d = x.shape
     di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
     p = cfg.ssm_head_dim
@@ -128,8 +149,15 @@ def ssm_forward(cfg, params: dict, x: jax.Array, sh=None,
     z, xi, b_mat, c_mat, dt = _split_proj(cfg, zxbcdt)
 
     xbc_raw = jnp.concatenate([xi, b_mat, c_mat], axis=-1)
-    conv_tail = xbc_raw[:, s - (cfg.ssm_conv_width - 1):]  # pre-conv window
-    xbc = _causal_conv(xbc_raw, params["conv"])
+    if conv_state is None:
+        conv_tail = xbc_raw[:, s - (cfg.ssm_conv_width - 1):]  # pre-conv window
+    else:
+        # tail of the history-extended window: always W-1 long, even for
+        # chunks shorter than the conv width
+        window = jnp.concatenate(
+            [conv_state.astype(xbc_raw.dtype), xbc_raw], axis=1)
+        conv_tail = window[:, window.shape[1] - (cfg.ssm_conv_width - 1):]
+    xbc = _causal_conv(xbc_raw, params["conv"], history=conv_state)
     xi, b_mat, c_mat = jnp.split(xbc, [di, di + n], axis=-1)
 
     dt = jax.nn.softplus(dt.astype(jnp.float32)
@@ -147,7 +175,8 @@ def ssm_forward(cfg, params: dict, x: jax.Array, sh=None,
         dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
         b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
         c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
-    y, state = ssd_chunked(xh, dt, a, b_mat, c_mat, chunk, sh)
+    y, state = ssd_chunked(xh, dt, a, b_mat, c_mat, chunk, sh,
+                           init_state=initial_state)
     if pad:
         y = y[:, :s]
 

@@ -344,6 +344,166 @@ def cache_insert(cfg, cache: dict, one: dict, slot) -> dict:
     return out
 
 
+def cache_extract(cfg, cache: dict, slot) -> dict:
+    """Batch-1 snapshot of one slot's cache rows (inverse of
+    :func:`cache_insert`). ``slot`` may be traced; shapes are static."""
+    axes = cache_slot_axes(cfg)
+    return {name: jax.lax.dynamic_slice_in_dim(cache[name], slot, 1, axis=ax)
+            for name, ax in axes.items()}
+
+
+def cache_keep(cfg, old: dict, new: dict, keep) -> dict:
+    """Per-slot merge of two caches: slots where ``keep`` (bool (n_slots,))
+    is True retain ``old``'s rows, the rest take ``new``.
+
+    This is what makes a partially-prefilled slot survive the fused
+    decode+prefill step: a plain ``decode_step`` advances every slot's
+    state, so the fused step re-selects the old rows for mid-prefill slots
+    before the chunk runs. Only state a pending chunk cannot rewrite is
+    re-selected — the position counters (pinning ``pos`` stops the
+    per-step climb, confining the foreign decode's K/V write to the one
+    index the slot's next chunk overwrites before anything reads it; the
+    chunk masks by its host-tracked offset and sets ``pos`` absolutely)
+    and the recurrent ``ssm``/``conv`` states (a multiplicative update, so
+    a foreign decode corrupts them irreversibly). Append-style K/V
+    buffers pass through untouched: a full-cache ``jnp.where`` would keep
+    both copies alive and force XLA to materialize the whole cache every
+    fused step, costing more than the prefill chunk itself. Selection is
+    elementwise (bit-exact, GSPMD-local)."""
+    axes = cache_slot_axes(cfg)
+    out = dict(new)
+    for name, axis in axes.items():
+        if name not in ("pos", "ssm", "conv"):
+            continue
+        shape = [1] * old[name].ndim
+        shape[axis] = old[name].shape[axis]
+        out[name] = jnp.where(keep.reshape(shape), old[name], new[name])
+    return out
+
+
+def _set_pos(pos, slot, value):
+    upd = jnp.reshape(value, (1,)).astype(pos.dtype)
+    return jax.lax.dynamic_update_slice_in_dim(pos, upd, slot, axis=0)
+
+
+def prefill_chunk(cfg, params, cache: dict, tokens, slot, offset, sh=None):
+    """Advance ONE slot's prefill by a chunk of C prompt tokens.
+
+    tokens: (1, C) int32 with C static; ``slot`` / ``offset`` are traced
+    int32 scalars, ``offset`` the number of prompt tokens already in the
+    slot. The partially-prefilled slot is a first-class cache state for
+    every family: attention reads the slot's pre-write rows and masks
+    exactly what a whole-prompt prefill would see (ring-aware for sliding
+    windows), ssm/hybrid thread the slot's recurrent + conv states through
+    the chunk. Returns (last-token logits (1, V), new_cache) with
+    ``cache["pos"][slot]`` advanced to ``offset + C``."""
+    x = _embed_in(cfg, params, tokens, sh)
+    c = x.shape[1]
+    new_pos = _set_pos(cache["pos"], slot, offset + c)
+
+    if cfg.family == "ssm":
+        st0 = jax.lax.dynamic_slice_in_dim(cache["ssm"], slot, 1, axis=1)
+        cv0 = jax.lax.dynamic_slice_in_dim(cache["conv"], slot, 1, axis=1)
+        # offset == 0 is a FRESH prefill: the slot's resident state belongs
+        # to its previous occupant and must read as start-of-sequence zeros
+        # (attention needs no gate — masking zeroes stale lanes exactly)
+        st0 = jnp.where(offset > 0, st0, jnp.zeros_like(st0))
+        cv0 = jnp.where(offset > 0, cv0, jnp.zeros_like(cv0))
+
+        def body(x, xs):
+            lp, st, cv = xs
+            h = rms_norm(x, lp["ln1"]["scale"])
+            y, st, cv = S.ssm_forward(cfg, lp["ssm"], h, sh, chunk=c,
+                                      return_state=True,
+                                      initial_state=st, conv_state=cv)
+            return x + y, (st, cv)
+
+        x, (sts, cvs) = jax.lax.scan(
+            body, x, (params["layers"], st0, cv0))
+        new_cache = dict(
+            cache,
+            ssm=jax.lax.dynamic_update_slice_in_dim(
+                cache["ssm"], sts.astype(cache["ssm"].dtype), slot, axis=1),
+            conv=jax.lax.dynamic_update_slice_in_dim(
+                cache["conv"], cvs.astype(cache["conv"].dtype), slot, axis=1),
+            pos=new_pos)
+        return _decode_head_out(cfg, params, x[:, -1:], sh), new_cache
+
+    if cfg.is_hybrid:
+        return _hybrid_prefill_chunk(cfg, params, cache, x, slot, offset,
+                                     new_pos, sh)
+
+    def body(x, xs):
+        lp, kc, vc = xs
+        h = rms_norm(x, lp["ln1"]["scale"])
+        y, kc, vc = A.chunk_attention(cfg, lp["attn"], h, kc, vc,
+                                      slot, offset, sh)
+        x = x + y
+        h = rms_norm(x, lp["ln2"]["scale"])
+        if "moe" in lp:
+            y, _ = MOE.moe_ffn(cfg, lp["moe"], h, sh)
+        else:
+            y = M.mlp(cfg, lp["mlp"], h, sh)
+        return x + y, (kc, vc)
+
+    x, (new_k, new_v) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"]))
+    new_cache = dict(cache, k=new_k, v=new_v, pos=new_pos)
+    return _decode_head_out(cfg, params, x[:, -1:], sh), new_cache
+
+
+def _hybrid_prefill_chunk(cfg, params, cache, x, slot, offset, new_pos, sh):
+    per = cfg.attn_period
+    attn_at = per // 2
+    c = x.shape[1]
+
+    def body(x, xs):
+        lp, kc, vc, stc, cvc = xs
+        st_s = jax.lax.dynamic_slice_in_dim(stc, slot, 1, axis=1)
+        cv_s = jax.lax.dynamic_slice_in_dim(cvc, slot, 1, axis=1)
+        # fresh prefill (offset == 0): stale occupant state reads as zeros
+        st_s = jnp.where(offset > 0, st_s, jnp.zeros_like(st_s))
+        cv_s = jnp.where(offset > 0, cv_s, jnp.zeros_like(cv_s))
+        mi = di = oi = 0
+        new_st, new_cv = [], []
+        for j in range(per):
+            h = rms_norm(x, lp["ln1"]["scale"][j])
+            if j == attn_at:
+                y, kc, vc = A.chunk_attention(cfg, lp["attn"], h, kc, vc,
+                                              slot, offset, sh)
+            else:
+                mamba_j = jax.tree.map(lambda a, i=mi: a[i], lp["mamba"])
+                y, st, cv = S.ssm_forward(cfg, mamba_j, h, sh, chunk=c,
+                                          return_state=True,
+                                          initial_state=st_s[mi],
+                                          conv_state=cv_s[mi])
+                new_st.append(st)
+                new_cv.append(cv)
+                mi += 1
+            x = x + y
+            h = rms_norm(x, lp["ln2"]["scale"][j])
+            if cfg.moe_layer(j):
+                moe_j = jax.tree.map(lambda a, i=oi: a[i], lp["moe"])
+                y, _ = MOE.moe_ffn(cfg, moe_j, h, sh)
+                oi += 1
+            else:
+                mlp_j = jax.tree.map(lambda a, i=di: a[i], lp["mlp"])
+                y = M.mlp(cfg, mlp_j, h, sh)
+                di += 1
+            x = x + y
+        stc = jax.lax.dynamic_update_slice_in_dim(
+            stc, jnp.stack(new_st).astype(stc.dtype), slot, axis=1)
+        cvc = jax.lax.dynamic_update_slice_in_dim(
+            cvc, jnp.stack(new_cv).astype(cvc.dtype), slot, axis=1)
+        return x, (kc, vc, stc, cvc)
+
+    x, (nk, nv, nst, ncv) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"],
+                  cache["ssm"], cache["conv"]))
+    new_cache = dict(cache, k=nk, v=nv, ssm=nst, conv=ncv, pos=new_pos)
+    return _decode_head_out(cfg, params, x[:, -1:], sh), new_cache
+
+
 def decode_step(cfg, params, cache: dict, tokens_or_embeds, sh=None):
     """One decode step for the whole batch -> (logits, new_cache).
 

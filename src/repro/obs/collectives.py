@@ -103,10 +103,11 @@ def audit_hlo(text: str, entry: str = "program",
 def lower_serving_hlo(engine, *, n_slots: int, prompt_len: int,
                       max_new_cap: int) -> Dict[str, str]:
     """Compiled (optimized, SPMD-partitioned) HLO text of the engine's
-    two jitted serving programs — ``decode_step`` and ``prefill_into`` —
-    lowered with the engine's *placed* parameter tree and a freshly placed
-    :class:`DecodeState` under the engine's ambient mesh, so the HLO is
-    exactly what serving executes. Works for both the plain and the
+    jitted serving programs — ``decode_step``, ``prefill_into`` and (on
+    the single-sample path) the fused chunked-prefill ``decode_prefill``
+    step — lowered with the engine's *placed* parameter tree and a freshly
+    placed :class:`DecodeState` under the engine's ambient mesh, so the
+    HLO is exactly what serving executes. Works for both the plain and the
     K-replica ensemble path (whichever the engine serves)."""
     import jax.numpy as jnp
 
@@ -124,21 +125,31 @@ def lower_serving_hlo(engine, *, n_slots: int, prompt_len: int,
                 rs.stacked, rs.base, state.cache, state.logits,
                 state.agreement, state.variance, prompt, slot,
                 state.context_len).compile()
-        else:
-            dec = engine._decode.lower(
-                engine.params, state.cache, tok).compile()
-            pre = engine._prefill_into.lower(
-                engine.params, state.cache, state.logits, prompt, slot,
-                state.context_len).compile()
-    return {"decode_step": dec.as_text(), "prefill_into": pre.as_text()}
+            return {"decode_step": dec.as_text(),
+                    "prefill_into": pre.as_text()}
+        dec = engine._decode.lower(
+            engine.params, state.cache, tok).compile()
+        pre = engine._prefill_into.lower(
+            engine.params, state.cache, state.logits, prompt, slot,
+            state.context_len).compile()
+        # the fused step at a representative geometry: one full-width
+        # prompt chunk interleaved into the all-slots decode
+        chunk = jnp.zeros((1, prompt_len), jnp.int32)
+        keep = jnp.zeros((n_slots,), bool)
+        fused = engine._decode_prefill.lower(
+            engine.params, state.cache, state.logits, tok, keep, chunk,
+            slot, jnp.int32(0)).compile()
+    return {"decode_step": dec.as_text(), "prefill_into": pre.as_text(),
+            "decode_prefill": fused.as_text()}
 
 
 def audit_engine(engine, *, n_slots: int, prompt_len: int,
                  max_new_cap: int) -> Dict[str, CollectiveAudit]:
-    """Audits the serving engine's two jitted programs for the given decode
+    """Audits the serving engine's jitted programs for the given decode
     geometry: ``decode_step`` (one full step over all slots — the per-step
-    collective count) and ``prefill_into`` (one request splice). See
-    :func:`lower_serving_hlo` for what is lowered."""
+    collective count), ``prefill_into`` (one request splice) and, on the
+    single-sample path, the fused ``decode_prefill`` chunked-prefill step.
+    See :func:`lower_serving_hlo` for what is lowered."""
     texts = lower_serving_hlo(engine, n_slots=n_slots,
                               prompt_len=prompt_len,
                               max_new_cap=max_new_cap)

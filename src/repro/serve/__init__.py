@@ -29,12 +29,25 @@ The decode cache is long-lived and slot-addressed (``models.transformer.
 cache_insert``): requests join and leave mid-stream while every jitted
 shape stays fixed, so the decode step compiles once per (n_slots,
 context_len) and never re-specializes.
+
+**Chunked prefill + prefix reuse.** ``stream_serve(prefill_chunk=C)``
+replaces the whole-prompt admission stall with the fused ``decode_prefill``
+step — every iteration advances all live decode slots one token AND one
+arriving prompt by one C-token chunk (a partially-prefilled slot is a
+first-class cache state for every family; see ``models.transformer.
+prefill_chunk``). ``prefix_cache`` (``prefix_cache.PrefixCache``) layers
+prompt-prefix KV reuse on top: chunk-boundary snapshots keyed on the
+prompt-prefix hash splice into a fresh slot and skip those chunks; a
+full-prompt hit skips prefill entirely. Greedy streams stay bit-identical
+to one-shot ``generate`` either way (tests/test_serve_conformance.py).
 """
 from repro.serve.batcher import Request, SlotBatcher
 from repro.serve.engine import (DecodeState, GenerationResult, ServeEngine,
                                 pack_params, packed_param_bytes, stream_serve)
+from repro.serve.prefix_cache import PrefixCache, PrefixEntry
 
 __all__ = [
-    "DecodeState", "GenerationResult", "Request", "ServeEngine",
-    "SlotBatcher", "pack_params", "packed_param_bytes", "stream_serve",
+    "DecodeState", "GenerationResult", "PrefixCache", "PrefixEntry",
+    "Request", "ServeEngine", "SlotBatcher", "pack_params",
+    "packed_param_bytes", "stream_serve",
 ]

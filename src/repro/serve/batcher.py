@@ -74,6 +74,13 @@ class SlotBatcher:
         self.slots: list[Optional[Request]] = [None] * n_slots
         self._uid = itertools.count()
         self.completed: list[Request] = []
+        # Slots whose prompt is still being prefilled chunk-by-chunk
+        # (stream_serve's chunked-prefill mode): the request occupies the
+        # slot (so it is never refilled and the stream is not idle) but it
+        # is NOT active — record() skips it, so no decode garbage lands in
+        # its ledger and t_first stamps on the first *generated* token,
+        # never on a prefill chunk's completion.
+        self.prefilling: set[int] = set()
         # Optional repro.obs.Tracer: the request lifecycle (submit ->
         # slot_refill -> request_done) lands as instant events on the same
         # timeline as the engine's spans, so queue waits are visible in the
@@ -116,8 +123,19 @@ class SlotBatcher:
                                     slot=i, queued=len(self.queue))
         return changed
 
+    def mark_prefilling(self, slot: int) -> None:
+        """Flag a slot as mid-chunked-prefill: occupied but not yet
+        decoding (excluded from record / active_mask / min_remaining)."""
+        self.prefilling.add(slot)
+
+    def mark_ready(self, slot: int) -> None:
+        """Prefill finished: the slot joins the active decode set."""
+        self.prefilling.discard(slot)
+
     def active_mask(self) -> np.ndarray:
-        return np.array([r is not None and not r.done for r in self.slots])
+        return np.array([r is not None and not r.done
+                         and i not in self.prefilling
+                         for i, r in enumerate(self.slots)])
 
     def prompts(self) -> np.ndarray:
         out = np.full((self.n_slots, self.prompt_len), self.pad_id, np.int32)
@@ -132,6 +150,8 @@ class SlotBatcher:
         arrays (ensemble serving) append the matching uncertainty stats."""
         now = time.perf_counter()
         for i, r in enumerate(self.slots):
+            if i in self.prefilling:
+                continue
             if r is not None and not r.done:
                 if r.t_first is None:
                     r.t_first = now
@@ -153,7 +173,8 @@ class SlotBatcher:
         chunk boundary, where the refill runs — slot turnover timing (and
         therefore every stream) is bit-identical to the one-token loop."""
         rem = [r.max_new - len(r.generated)
-               for r in self.slots if r is not None and not r.done]
+               for i, r in enumerate(self.slots)
+               if r is not None and not r.done and i not in self.prefilling]
         return min(rem) if rem else None
 
     @property

@@ -284,6 +284,64 @@ class ServeEngine:
 
         self._prefill_into = jax.jit(_prefill_into, static_argnums=5)
 
+        def _prefill_chunk(p, cache, logits, chunk_toks, slot, offset):
+            """One prefill chunk for one slot, no decode (the ramp-up /
+            drain path when no other slot is actively decoding)."""
+            lg, cache = T.prefill_chunk(cfg, p, cache, chunk_toks, slot,
+                                        offset, sh)
+            logits = jax.lax.dynamic_update_slice_in_dim(
+                logits, lg.astype(logits.dtype), slot, axis=0)
+            cache, logits = self._pin_state(cache, logits)
+            return logits, cache
+
+        self._prefill_chunk = jax.jit(_prefill_chunk)
+
+        def _decode_prefill(p, cache, logits, tok, keep, chunk_toks, slot,
+                            offset):
+            """The fused steady-state step of chunked prefill: advance all
+            live decode slots one token AND one slot's prefill by one chunk,
+            in a single fixed-shape program. ``keep`` (n_slots,) bool marks
+            mid-prefill slots whose logits and non-rewritable cache state
+            must survive the batched decode: cache_keep re-selects the old
+            position counters and recurrent ssm/conv states bit-exactly
+            (append-style K/V writes land where the slot's next chunk
+            overwrites them — see its docstring) before the chunk runs."""
+            dec_lg, dec_cache = T.decode_step(cfg, p, cache, tok, sh)
+            cache = T.cache_keep(cfg, cache, dec_cache, keep)
+            logits = jnp.where(keep[:, None], logits,
+                               dec_lg.astype(logits.dtype))
+            lg, cache = T.prefill_chunk(cfg, p, cache, chunk_toks, slot,
+                                        offset, sh)
+            logits = jax.lax.dynamic_update_slice_in_dim(
+                logits, lg.astype(logits.dtype), slot, axis=0)
+            cache, logits = self._pin_state(cache, logits)
+            return logits, cache
+
+        self._decode_prefill = jax.jit(_decode_prefill,
+                                       donate_argnums=(1, 2))
+
+        def _splice(cache, logits, one, lg, slot, use_lg):
+            """Splice a prefix-cache snapshot (batch-1 rows) into a slot;
+            ``use_lg`` (static) also installs the snapshot's first-token
+            logits (full-prompt hits)."""
+            cache = T.cache_insert(cfg, cache, one, slot)
+            if use_lg:
+                logits = jax.lax.dynamic_update_slice_in_dim(
+                    logits, lg.astype(logits.dtype), slot, axis=0)
+            cache, logits = self._pin_state(cache, logits)
+            return logits, cache
+
+        self._splice = jax.jit(_splice, static_argnums=5)
+
+        def _extract(cache, logits, slot):
+            """Batch-1 snapshot of one slot's cache rows + logits row (the
+            capture side of the prefix cache)."""
+            one = T.cache_extract(cfg, cache, slot)
+            lg = jax.lax.dynamic_slice_in_dim(logits, slot, 1, axis=0)
+            return one, lg
+
+        self._extract = jax.jit(_extract)
+
         # K = 1 (or no stochastic rows) degrades to the plain single-sample
         # path above on ensemble.base — structurally the same program, so
         # the ensemble flag costs nothing and k=1 stays bit-identical.
@@ -390,7 +448,10 @@ class ServeEngine:
         chunk length (allowlisted by the sentinel's default)."""
         entries = {"prefill": self._prefill, "decode": self._decode,
                    "decode_chunk": self._decode_chunk,
-                   "prefill_into": self._prefill_into}
+                   "prefill_into": self._prefill_into,
+                   "prefill_chunk": self._prefill_chunk,
+                   "decode_prefill": self._decode_prefill,
+                   "splice": self._splice, "extract": self._extract}
         for name in ("_prefill_ens", "_decode_ens", "_ens_prefill_into"):
             fn = getattr(self, name, None)
             if fn is not None:
@@ -615,6 +676,89 @@ class ServeEngine:
                 tr.fence(logits)
         return dataclasses.replace(state, cache=cache, logits=logits), toks
 
+    # -- chunked prefill + prefix reuse ------------------------------------
+
+    def _require_single_sample(self, what: str) -> None:
+        if self._replicas is not None:
+            raise NotImplementedError(
+                f"{what} is single-sample only; K-replica ensemble serving "
+                f"prefills whole prompts (stream_serve falls back)")
+
+    def prefill_chunk_into(self, state: DecodeState, slot: int, tokens,
+                           offset: int) -> DecodeState:
+        """Advance one slot's prefill by a chunk of prompt tokens (no
+        decode): the ramp-up / drain path of chunked prefill. ``offset``
+        is the number of prompt tokens already in the slot."""
+        self._require_single_sample("prefill_chunk_into")
+        tr = self.tracer
+        toks = jnp.asarray(tokens, jnp.int32).reshape(1, -1)
+        with tr.span("prefill_chunk", slot=slot, offset=int(offset),
+                     c=int(toks.shape[1])), self._mesh_ctx():
+            with tr.span("dispatch"):
+                logits, cache = self._prefill_chunk(
+                    self.params, state.cache, state.logits, toks,
+                    jnp.int32(slot), jnp.int32(offset))
+            with tr.span("device"):
+                tr.fence(logits)
+        return dataclasses.replace(state, cache=cache, logits=logits)
+
+    def fused_step(self, state: DecodeState, tokens, keep_mask, slot: int,
+                   chunk_tokens, offset: int) -> DecodeState:
+        """The chunked-prefill steady state: ONE fixed-shape jitted call
+        advances every live decode slot one token AND one slot's prefill by
+        one chunk, so an arriving prompt never stalls the stream.
+        ``tokens``: (n_slots,) just-emitted tokens; ``keep_mask``:
+        (n_slots,) bool, True for mid-prefill slots whose state must
+        survive the batched decode."""
+        self._require_single_sample("fused_step")
+        tr = self.tracer
+        tokens = jnp.asarray(tokens, jnp.int32).reshape(state.n_slots, 1)
+        keep = jnp.asarray(np.asarray(keep_mask, bool))
+        toks = jnp.asarray(chunk_tokens, jnp.int32).reshape(1, -1)
+        with tr.span("decode_prefill", slot=slot, offset=int(offset),
+                     c=int(toks.shape[1])), self._mesh_ctx():
+            with tr.span("dispatch"):
+                logits, cache = self._decode_prefill(
+                    self.params, state.cache, state.logits, tokens, keep,
+                    toks, jnp.int32(slot), jnp.int32(offset))
+            with tr.span("device"):
+                tr.fence(logits)
+        return dataclasses.replace(state, cache=cache, logits=logits)
+
+    def capture_slot(self, state: DecodeState, slot: int):
+        """Host (numpy) snapshot of one slot's cache rows + logits row —
+        the capture side of the prefix cache. One explicit device->host
+        transfer, at a chunk boundary (never in the decode steady state)."""
+        self._require_single_sample("capture_slot")
+        tr = self.tracer
+        with tr.span("prefix_capture", slot=slot), self._mesh_ctx():
+            one, lg = self._extract(state.cache, state.logits,
+                                    jnp.int32(slot))
+        return jax.device_get(one), jax.device_get(lg)
+
+    def splice_into(self, state: DecodeState, slot: int, cache_rows: dict,
+                    logits_row=None) -> DecodeState:
+        """Splice a prefix-cache snapshot into a slot (prefix-cache hit).
+        With ``logits_row`` (full-prompt snapshot) the slot is immediately
+        decodable; otherwise chunked prefill continues from the snapshot's
+        offset."""
+        self._require_single_sample("splice_into")
+        tr = self.tracer
+        use_lg = logits_row is not None
+        lg = (jnp.asarray(logits_row) if use_lg
+              else jnp.zeros((1, state.logits.shape[1]),
+                             state.logits.dtype))
+        one = {k: jnp.asarray(v) for k, v in cache_rows.items()}
+        with tr.span("prefix_splice", slot=slot,
+                     full=bool(use_lg)), self._mesh_ctx():
+            with tr.span("dispatch"):
+                logits, cache = self._splice(state.cache, state.logits,
+                                             one, lg, jnp.int32(slot),
+                                             use_lg)
+            with tr.span("device"):
+                tr.fence(logits)
+        return dataclasses.replace(state, cache=cache, logits=logits)
+
 
 def stream_serve(engine: ServeEngine, batcher, *,
                  max_new_cap: Optional[int] = None,
@@ -622,7 +766,10 @@ def stream_serve(engine: ServeEngine, batcher, *,
                  key: Optional[jax.Array] = None,
                  metrics=None,
                  decode_chunk: int = 1,
-                 sentinel=None) -> int:
+                 sentinel=None,
+                 prefill_chunk: int = 0,
+                 prefix_cache=None,
+                 arrivals=None) -> int:
     """Step-level continuous-batching serving loop.
 
     Each iteration: retire finished requests and re-prefill their slots
@@ -665,6 +812,34 @@ def stream_serve(engine: ServeEngine, batcher, *,
     recompile of the engine's entry points — the silent
     retrace-every-step failure mode (``launch.serve --analyze`` wires
     this up; strict sentinels raise at the offending step).
+
+    ``prefill_chunk > 0`` (single-sample serving only) switches prompt
+    admission onto *chunked prefill*: instead of one whole-prompt
+    ``prefill_into`` that stalls every live decode slot, an arriving
+    prompt is consumed ``prefill_chunk`` tokens at a time by the fused
+    ``decode_prefill`` step — each iteration advances all live decode
+    slots one token AND one mid-prefill slot by one chunk (falling back
+    to a chunk-only step while no slot is actively decoding). Mid-prefill
+    slots are flagged on the batcher (``mark_prefilling``) so no decode
+    garbage lands in their ledger and ``t_first`` stamps on the first
+    *generated* token. Ring (sliding-window) caches clamp the chunk to
+    the cache length. Per-request streams stay bit-identical to the
+    whole-prompt path (tests/test_serve_conformance.py).
+
+    ``prefix_cache`` (a ``repro.serve.PrefixCache``) adds prefix KV
+    reuse on top: at every chunk boundary the slot's cache rows are
+    snapshotted under the prompt-prefix hash, and an arriving prompt
+    whose prefix is cached splices the snapshot in (``splice_into``) and
+    skips those chunks — a full-prompt hit skips prefill entirely.
+    Implies chunked prefill (chunk defaults to ``prompt_len``). Hit /
+    miss / eviction / tokens-skipped counters and a bytes gauge land in
+    ``metrics``; capture/splice get tracer spans.
+
+    ``arrivals`` (callable ``iteration -> bool``) injects open-loop
+    request arrivals: called once per loop iteration (submitting to the
+    batcher as it sees fit) and returning True while more requests may
+    still arrive — the loop then idles through empty iterations instead
+    of returning (serve_bench's staggered-arrival rows).
     """
     if temperature > 0.0 and key is None:
         raise ValueError("temperature-sampled serving requires a PRNG key")
@@ -683,8 +858,48 @@ def stream_serve(engine: ServeEngine, batcher, *,
                                     "queued requests, sampled per step")
         occ_h = metrics.histogram("serve_slot_occupancy",
                                   "active-slot fraction, sampled per step")
+    use_prefill_chunks = prefill_chunk > 0 or prefix_cache is not None
+    if use_prefill_chunks and engine._replicas is not None:
+        raise NotImplementedError(
+            "chunked prefill / prefix reuse is single-sample only; drop "
+            "prefill_chunk=/prefix_cache= for K-replica ensemble serving")
+    chunk_len = prefill_chunk if prefill_chunk > 0 else batcher.prompt_len
+    if use_prefill_chunks and engine.cfg.sliding_window:
+        # ring caches need chunk <= cache length: chunk_attention's
+        # post-attention ring write assigns each chunk token its own slot
+        from repro.models.attention import cache_length
+        chunk_len = min(chunk_len, cache_length(engine.cfg,
+                                                batcher.prompt_len + cap))
+    if prefix_cache is not None:
+        # salt keys with the serving geometry (and this engine's identity):
+        # snapshots from a different engine, context geometry or chunking
+        # must never splice in — chunked and whole prefills agree only to
+        # ulp order, so chunk size is part of the key
+        prefix_cache.bind_geometry(
+            f"{id(engine)}:{engine.cfg.family}:{engine.cfg.vocab_size}:"
+            f"{batcher.prompt_len}:{cap}:{chunk_len}")
+    pc_start = prefix_cache.stats() if prefix_cache is not None else None
+    in_prefill: dict[int, int] = {}   # slot -> prompt tokens already in
+
+    def _advance_prefill(state, slot, new_off):
+        """Bookkeeping after a chunk landed: snapshot the chunk boundary
+        into the prefix cache, and promote the slot to the active decode
+        set once the whole prompt is in."""
+        req = batcher.slots[slot]
+        full = new_off >= batcher.prompt_len
+        if prefix_cache is not None and (prefix_cache.store_partial or full):
+            one, lg = engine.capture_slot(state, slot)
+            prefix_cache.put(req.prompt[:new_off], one,
+                             logits=lg if full else None)
+        if full:
+            batcher.mark_ready(slot)
+            del in_prefill[slot]
+        else:
+            in_prefill[slot] = new_off
+
     t_start = time.perf_counter()
     steps = 0
+    iterations = 0
     use_chunks = (decode_chunk > 1 and temperature == 0.0
                   and engine._replicas is None)
     with tr.span("stream_serve", n_slots=batcher.n_slots, cap=cap):
@@ -694,6 +909,9 @@ def stream_serve(engine: ServeEngine, batcher, *,
         try:
             while True:
                 t_step = time.perf_counter()
+                iterations += 1
+                more_arrivals = (bool(arrivals(iterations))
+                                 if arrivals is not None else False)
                 with tr.span("step", step=steps):
                     with tr.span("refill"):
                         for slot in batcher.refill():
@@ -708,14 +926,76 @@ def stream_serve(engine: ServeEngine, batcher, *,
                                     "serve_prefills_total",
                                     "slot prefills (one per request "
                                     "admitted)").inc()
-                            state = engine.prefill_into(state, slot,
-                                                        req.prompt)
+                            if not use_prefill_chunks:
+                                state = engine.prefill_into(state, slot,
+                                                            req.prompt)
+                                continue
+                            off = 0
+                            if prefix_cache is not None:
+                                hit = prefix_cache.lookup(req.prompt,
+                                                          chunk_len)
+                                if hit is not None:
+                                    off, entry = hit
+                                    full = off >= batcher.prompt_len
+                                    state = engine.splice_into(
+                                        state, slot, entry.cache,
+                                        logits_row=entry.logits
+                                        if full else None)
+                            if off < batcher.prompt_len:
+                                batcher.mark_prefilling(slot)
+                                in_prefill[slot] = off
                     if metrics is not None:
                         queue_h.observe(len(batcher.queue))
                         occ_h.observe(
                             float(np.mean(batcher.active_mask())))
                     if batcher.idle:
+                        if more_arrivals:
+                            continue
                         return steps
+                    if use_prefill_chunks and in_prefill:
+                        # chunked-prefill scheduling: fuse one chunk of the
+                        # oldest mid-prefill slot into the decode step when
+                        # anything is decoding, else run the chunk alone
+                        slot = next(iter(in_prefill))
+                        off = in_prefill[slot]
+                        req = batcher.slots[slot]
+                        c = min(chunk_len, batcher.prompt_len - off)
+                        chunk_toks = req.prompt[off:off + c]
+                        if batcher.active_mask().any():
+                            with tr.span("sample"):
+                                if temperature > 0.0:
+                                    key, sub = jax.random.split(key)
+                                    tok = jax.random.categorical(
+                                        sub,
+                                        state.logits.astype(jnp.float32)
+                                        / temperature, axis=-1)
+                                else:
+                                    tok = jnp.argmax(state.logits, axis=-1)
+                                tok_host = np.asarray(tok)
+                            with tr.span("record"):
+                                batcher.record(tok_host)
+                            steps += 1
+                            if metrics is not None:
+                                metrics.counter(
+                                    "serve_steps_total",
+                                    "token-emission steps").inc()
+                            keep = np.array(
+                                [i in batcher.prefilling
+                                 for i in range(batcher.n_slots)])
+                            state = engine.fused_step(state, tok, keep,
+                                                      slot, chunk_toks, off)
+                        else:
+                            state = engine.prefill_chunk_into(
+                                state, slot, chunk_toks, off)
+                        _advance_prefill(state, slot, off + c)
+                        if metrics is not None:
+                            metrics.counter("serve_prefill_chunks_total",
+                                            "prefill chunks executed").inc()
+                        if sentinel is not None:
+                            sentinel.step()
+                        if step_h is not None:
+                            step_h.observe(time.perf_counter() - t_step)
+                        continue
                     if use_chunks:
                         d = min(decode_chunk, batcher.min_remaining())
                         with tr.span("chunk", d=d):
@@ -737,7 +1017,7 @@ def stream_serve(engine: ServeEngine, batcher, *,
                             batcher.refill()
                         if step_h is not None:
                             step_h.observe(time.perf_counter() - t_step)
-                        if batcher.idle:
+                        if batcher.idle and not more_arrivals:
                             return steps
                         continue
                     with tr.span("sample"):
@@ -771,7 +1051,9 @@ def stream_serve(engine: ServeEngine, batcher, *,
                         batcher.refill()
                         if step_h is not None:
                             step_h.observe(time.perf_counter() - t_step)
-                        return steps
+                        if not more_arrivals:
+                            return steps
+                        continue
                     state = engine.decode_step(state, tok)
                     if sentinel is not None:
                         sentinel.step()
@@ -782,6 +1064,27 @@ def stream_serve(engine: ServeEngine, batcher, *,
                 from repro.obs.metrics import record_request_metrics
 
                 record_request_metrics(metrics, batcher)
+                if prefix_cache is not None:
+                    pc = prefix_cache.stats()
+                    metrics.counter(
+                        "serve_prefix_hits_total",
+                        "prefix-cache hits (prefill chunks skipped)").inc(
+                        pc["hits"] - pc_start["hits"])
+                    metrics.counter(
+                        "serve_prefix_misses_total",
+                        "prefix-cache misses (cold prefills)").inc(
+                        pc["misses"] - pc_start["misses"])
+                    metrics.counter(
+                        "serve_prefix_evictions_total",
+                        "prefix-cache LRU evictions").inc(
+                        pc["evictions"] - pc_start["evictions"])
+                    metrics.counter(
+                        "serve_prefix_tokens_skipped_total",
+                        "prompt tokens served from cached prefixes").inc(
+                        pc["tokens_skipped"] - pc_start["tokens_skipped"])
+                    metrics.gauge(
+                        "serve_prefix_bytes",
+                        "prefix-cache resident bytes").set(pc["bytes"])
                 dt = time.perf_counter() - t_start
                 if dt > 0:
                     metrics.gauge(
